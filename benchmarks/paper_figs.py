@@ -1,0 +1,95 @@
+"""Reproductions of the paper's figures 1-4 (performance curves vs wall time).
+
+Each function runs the corresponding scheme for M in {1, 2, 10} (Fig. 4:
+up to 32) on the synthetic mixture with tau=10 — the paper's setup — and
+returns/prints the distortion curves at matched wall ticks.  The paper's
+claims are asserted quantitatively by tests/test_schemes.py; these harness
+functions emit the CSV behind EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core import async_vq, schemes
+from repro.data import synthetic
+
+TAU = 10
+N = 4000
+D = 8
+KAPPA = 16
+KEY = jax.random.PRNGKey(2012)
+
+
+def _setup(m):
+    kd, kw = jax.random.split(KEY, 2)
+    data = synthetic.replicate_stream(kd, m, n=N, d=D)
+    # the criterion (eq. 2) is the distortion over the dataset itself
+    eval_data = data[:, :1000]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, D), KAPPA)
+    return data, eval_data, w0
+
+
+def _curve(res, ticks):
+    wt = np.asarray(res.wall_ticks)
+    dist = np.asarray(res.distortion)
+    idx = np.clip(np.searchsorted(wt, ticks), 0, len(dist) - 1)
+    return dist[idx]
+
+
+def fig1_averaging(ms=(1, 2, 10), ticks=(200, 1000, 2000, 4000)) -> dict:
+    """Section 2 / Fig. 1: averaging scheme — no speed-up from extra workers."""
+    out = {}
+    for m in ms:
+        data, eval_data, w0 = _setup(m)
+        if m == 1:
+            res = schemes.scheme_sequential(w0, data[0], eval_data, tau=TAU)
+        else:
+            res = schemes.scheme_average(w0, data, eval_data, tau=TAU)
+        out[m] = _curve(res, list(ticks))
+    return {"ticks": list(ticks), "curves": out}
+
+
+def fig2_delta(ms=(1, 2, 10), ticks=(200, 1000, 2000, 4000)) -> dict:
+    """Section 3 / Fig. 2: delta-merge scheme — ~M-fold speed-up."""
+    out = {}
+    for m in ms:
+        data, eval_data, w0 = _setup(m)
+        res = schemes.scheme_delta(w0, data, eval_data, tau=TAU)
+        out[m] = _curve(res, list(ticks))
+    return {"ticks": list(ticks), "curves": out}
+
+
+def fig3_async(ms=(1, 2, 10), ticks=(200, 1000, 2000, 4000),
+               p_delay=0.5) -> dict:
+    """Section 4 / Fig. 3: asynchronous scheme with geometric delays."""
+    out = {}
+    for m in ms:
+        data, eval_data, w0 = _setup(m)
+        res = async_vq.scheme_async(w0, data, eval_data,
+                                    jax.random.fold_in(KEY, m),
+                                    tau=TAU, p_delay=p_delay)
+        out[m] = _curve(res, list(ticks))
+    return {"ticks": list(ticks), "curves": out}
+
+
+def fig4_scaleup(ms=(1, 2, 4, 8, 16, 32), target=None) -> dict:
+    """Fig. 4 analogue: wall ticks to reach a distortion threshold vs M
+    (the Azure 32-VM scale-up, on the simulated architecture)."""
+    # threshold: what M=1 reaches at the END of its run
+    data, eval_data, w0 = _setup(1)
+    seq = schemes.scheme_sequential(w0, data[0], eval_data, tau=TAU)
+    thresh = target or float(seq.distortion[-1])
+    out = {}
+    for m in ms:
+        data, eval_data, w0 = _setup(m)
+        res = async_vq.scheme_async(w0, data, eval_data,
+                                    jax.random.fold_in(KEY, 100 + m),
+                                    tau=TAU, p_delay=0.5)
+        dist = np.asarray(res.distortion)
+        wt = np.asarray(res.wall_ticks)
+        hit = np.argmax(dist <= thresh) if np.any(dist <= thresh) else -1
+        out[m] = int(wt[hit]) if hit >= 0 else -1
+    return {"threshold": thresh, "ticks_to_threshold": out}

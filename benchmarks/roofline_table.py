@@ -1,0 +1,61 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dryrun.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| skipped: {r['reason'][:40]} |")
+    if r["status"] == "error":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| ERROR |")
+    t = r["roofline"]
+    dom = t["dominant"]
+    peak = r["memory"]["peak_bytes"] / 2**30
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {t['t_compute']:.4f} | {t['t_memory']:.4f} "
+        f"| {t['t_collective']:.4f} | **{dom}** "
+        f"| useful={t['useful_ratio']:.2f} mfu≤{t['mfu_bound']:.2f} "
+        f"peak={peak:.2f}GiB |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--mesh", default=None, choices=[None, "16x16", "2x16x16"])
+    args = ap.parse_args()
+    rows = load(args.json)
+    rows = [r for r in rows if r.get("merge", "none") == "none"]
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("| arch | shape | mesh | t_compute (s) | t_memory (s) "
+          "| t_collective (s) | dominant | notes |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(fmt_row(r))
+
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["roofline"]["dominant"]] = doms.get(
+                r["roofline"]["dominant"], 0) + 1
+        print(f"\ndominant-term counts: {doms} over {len(ok)} ok cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""The paper's Section-4 cloud architecture, for real: worker THREADS + a
+dedicated reducer merging displacement messages through a versioned blob
+store, no synchronization barrier anywhere — with an injected straggler to
+demonstrate the scheme's tolerance (the reason the paper removed barriers).
+
+    PYTHONPATH=src python examples/cloud_async_vq.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import async_runtime
+from repro.data import synthetic
+
+M, N, D, KAPPA = 8, 3000, 8, 16
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    data = np.asarray(synthetic.replicate_stream(key, M, n=N, d=D))
+    w0 = np.asarray(synthetic.kmeanspp_init(
+        jax.random.fold_in(key, 1),
+        jax.numpy.asarray(data.reshape(-1, D)), KAPPA))
+
+    print(f"{M} worker threads + 1 reducer, tau=10, 2s wall clock")
+    w, stats, trace = async_runtime.run_async_vq(
+        data, w0, tau=10, duration_s=2.0, comm_delay_s=0.002)
+    print("distortion over wall time:",
+          " -> ".join(f"{d_:.4f}" for _, d_ in trace[::5]))
+    print("points/worker:", [s.points for s in stats])
+
+    print(f"\nsame run with worker 0 slowed 100x (straggler):")
+    w2, stats2, trace2 = async_runtime.run_async_vq(
+        data, w0, tau=10, duration_s=2.0, comm_delay_s=0.002,
+        straggler={0: 100.0})
+    print("distortion over wall time:",
+          " -> ".join(f"{d_:.4f}" for _, d_ in trace2[::5]))
+    print("points/worker:", [s.points for s in stats2])
+    print("\nno barrier => the straggler only slows itself; global "
+          "convergence continues (paper Section 4).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+on the deterministic synthetic pipeline, with async checkpointing and a
+mid-run simulated failure + restart (the fault-tolerance path).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointing import Checkpointer
+from repro.data.pipeline import DataConfig, lm_batch
+from repro.models.common import ModelConfig
+from repro.optim import optimizers
+from repro.training import steps as steps_lib
+
+
+def make_100m() -> ModelConfig:
+    # ~100M params: 12L x 512 x 8H, d_ff 2048, 32k vocab
+    return ModelConfig(
+        name="repro-100m", family="dense", n_layers=12, d_model=512,
+        n_heads=8, n_kv_heads=4, d_ff=2048, vocab=32768,
+        dtype=jnp.float32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = make_100m()
+    print(f"model: {cfg.name} ({cfg.n_params() / 1e6:.0f}M params)")
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                      global_batch=args.batch)
+    opt = optimizers.adamw(
+        optimizers.cosine_schedule(3e-4, warmup=30, total=args.steps))
+    step = jax.jit(steps_lib.make_train_step(cfg, opt), donate_argnums=(0,))
+    state = steps_lib.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    ckpt = Checkpointer(ckpt_dir)
+    half = args.steps // 2
+
+    # ---- phase 1: train to the midpoint, checkpointing async -------------
+    for i in range(half):
+        state, metrics = step(state, lm_batch(dcfg, i))
+        if (i + 1) % 20 == 0:
+            print(f"step {i + 1:4d}  loss {float(metrics['loss']):.4f}")
+        if (i + 1) % 50 == 0:
+            ckpt.save_async(i + 1, state)
+    ckpt.save(half, state)
+    ckpt.wait()
+
+    # ---- simulated node failure: throw the live state away ---------------
+    print(f"\n--- simulated failure at step {half}; "
+          f"restarting from {ckpt.latest_step()} ---\n")
+    del state
+    state = steps_lib.init_train_state(cfg, opt, jax.random.PRNGKey(1))
+    state = ckpt.restore(ckpt.latest_step(), state)
+
+    # ---- phase 2: resume; the step-indexed pipeline replays exactly ------
+    final = None
+    for i in range(half, args.steps):
+        state, metrics = step(state, lm_batch(dcfg, i))
+        final = float(metrics["loss"])
+        if (i + 1) % 20 == 0:
+            print(f"step {i + 1:4d}  loss {final:.4f}")
+    print(f"\nfinal loss {final:.4f} (started ~{jnp.log(cfg.vocab):.2f})")
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Shard-aware checkpointing with async writes and elastic restore.
+
+Layout (one directory per step):
+
+    ckpt_dir/step_000123/
+        manifest.json      # step, pytree structure, leaf shapes/dtypes, mesh
+        leaf_000.npy ...   # one .npy per leaf (host-local full array)
+
+Design points for 1000+-node deployments (documented; exercised here on one
+host):
+
+  * every leaf is written through a temp file + atomic rename, and the
+    manifest is written LAST — a partially written checkpoint is never
+    restorable, so a crash mid-save can't corrupt the latest good step;
+  * ``save_async`` snapshots leaves to host memory (jax.device_get) and hands
+    the I/O to a daemon thread — the train loop never blocks on disk;
+  * ``restore`` takes an optional target sharding pytree: arrays are laid out
+    onto whatever mesh the *restarting* job has (elastic restart: the new job
+    may have a different device count than the one that saved);
+  * ``latest_step``/``gc_old`` implement retention for long runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import queue
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't natively (de)serialize ml_dtypes types; leaves are stored as
+# raw same-width integer views with the logical dtype in the manifest.
+_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+         "float8_e5m2": np.uint8}
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    name = arr.dtype.name
+    return arr.view(_VIEW[name]) if name in _VIEW else arr
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW:
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _leaf_paths(tree) -> list[str]:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in paths]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._queue: queue.Queue = queue.Queue()
+        self._worker = threading.Thread(target=self._drain, daemon=True)
+        self._worker.start()
+        self._errors: list[Exception] = []
+
+    # -- writing ----------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self._queue.put((step, host_tree))
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.save(step, tree, blocking=False)
+
+    def wait(self) -> None:
+        self._queue.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def _drain(self) -> None:
+        while True:
+            step, host_tree = self._queue.get()
+            try:
+                self._write(step, host_tree)
+            except Exception as e:  # surfaced on wait()
+                self._errors.append(e)
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree.flatten(host_tree)
+        names = _leaf_paths(host_tree)
+        for i, leaf in enumerate(leaves):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"),
+                    _to_storable(np.asarray(leaf)))
+        manifest = {
+            "step": step,
+            "n_leaves": len(leaves),
+            "names": names,
+            "shapes": [list(np.shape(l)) for l in leaves],
+            "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+            "treedef": str(treedef),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    # -- reading ----------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: Any,
+                shardings: Any | None = None) -> Any:
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings for elastic placement on the current mesh."""
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree.flatten(target)
+        if len(leaves) != manifest["n_leaves"]:
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, "
+                f"target has {len(leaves)}")
+        loaded = [
+            _from_storable(np.load(os.path.join(path, f"leaf_{i:05d}.npy")),
+                           manifest["dtypes"][i])
+            for i in range(len(leaves))]
+        for i, (got, want) in enumerate(zip(loaded, leaves)):
+            if tuple(got.shape) != tuple(np.shape(want)):
+                raise ValueError(
+                    f"leaf {manifest['names'][i]}: checkpoint shape "
+                    f"{got.shape} != target {np.shape(want)}")
+        if shardings is not None:
+            shard_leaves = jax.tree.leaves(shardings)
+            loaded = [jax.device_put(a, s)
+                      for a, s in zip(loaded, shard_leaves)]
+        else:
+            loaded = [jax.device_put(a) for a in loaded]
+        return jax.tree.unflatten(treedef, loaded)

@@ -1,0 +1,125 @@
+"""Architecture registry: ``get_config(arch_id)`` + shape cells + input specs.
+
+Every assigned architecture is a module ``src/repro/configs/<id>.py`` exposing
+``CONFIG`` (exact published dims) and ``smoke_config()`` (reduced same-family
+config for CPU tests).  This module adds the shape grid and the
+ShapeDtypeStruct input builders used by the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS = [
+    "granite_34b", "granite_8b", "starcoder2_7b", "command_r_35b",
+    "whisper_tiny", "moonshot_v1_16b_a3b", "olmoe_1b_7b", "mamba2_2p7b",
+    "internvl2_76b", "hymba_1p5b",
+]
+
+# archs whose params+optimizer need ZeRO-3 ('data'-axis) sharding to fit v5e.
+# starcoder2: 36 heads don't divide TP=16 => attention params replicate on
+# 'model'; without FSDP their f32 Adam moments alone are ~22 GiB/device
+# (measured 19.1 GiB peak -> 1.2 GiB with FSDP; EXPERIMENTS.md §Perf).
+FSDP_ARCHS = {"granite_34b", "command_r_35b", "internvl2_76b",
+              "moonshot_v1_16b_a3b", "starcoder2_7b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = [
+    ShapeCell("train_4k", "train", 4096, 256),
+    ShapeCell("prefill_32k", "prefill", 32768, 32),
+    ShapeCell("decode_32k", "decode", 32768, 128),
+    ShapeCell("long_500k", "decode", 524288, 1),
+]
+
+# long_500k needs sub-quadratic decode state: run only for SSM/hybrid
+LONG_OK_FAMILIES = {"ssm", "hybrid"}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.smoke_config()
+
+
+def uses_fsdp(arch_id: str) -> bool:
+    return arch_id in FSDP_ARCHS
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch, shape) pair."""
+    if cell.name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return False, "full quadratic attention at 524k context (DESIGN.md §4)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, *, tau: int | None = None
+                ) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    ``tau``: if given (window step), a leading tau dim is added to each leaf.
+    """
+    b, t = cell.global_batch, cell.seq_len
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+    if cell.kind in ("train", "prefill"):
+        t_text = t
+        batch: dict = {}
+        if cfg.family == "vlm":
+            t_text = t - cfg.img_tokens
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.img_tokens, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+        batch["tokens"] = tok((b, t_text))
+        if cell.kind == "train":
+            batch["labels"] = tok((b, t_text))
+        if tau is not None:
+            batch = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((tau, *s.shape), s.dtype),
+                batch)
+        return batch
+    # decode: one new token against a cache of length seq_len
+    return {"tokens": tok((b, 1))}
+
+
+def cache_shapes(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs of the decode cache for a decode cell."""
+    from repro.models import transformer, encdec as _  # noqa
+    from repro.models.api import get_api
+
+    if cfg.family == "encdec":
+        L, b = cfg.n_layers, cell.global_batch
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        h = cfg.n_heads
+        return {
+            "cur_len": jax.ShapeDtypeStruct((), jnp.int32),
+            "k": jax.ShapeDtypeStruct((L, b, cell.seq_len, hkv, dh), cfg.dtype),
+            "v": jax.ShapeDtypeStruct((L, b, cell.seq_len, hkv, dh), cfg.dtype),
+            "ck": jax.ShapeDtypeStruct(
+                (L, b, cfg.encoder_frames, h, dh), cfg.dtype),
+            "cv": jax.ShapeDtypeStruct(
+                (L, b, cfg.encoder_frames, h, dh), cfg.dtype),
+        }
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, cell.global_batch, cell.seq_len))

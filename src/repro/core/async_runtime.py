@@ -1,0 +1,155 @@
+"""True asynchronous VQ runtime — the paper's CloudDALVQ system shape.
+
+``async_vq.py`` simulates eq. (9) tick-by-tick inside one ``lax.scan``; this
+module runs it FOR REAL: worker threads execute local VQ concurrently, a
+dedicated reducer thread merges displacement messages with no barrier
+anywhere, and a versioned blob store stands in for Azure blob storage (the
+paper's section-4 architecture: "each machine uploads its updates and
+downloads the shared version as soon as its previous uploads and downloads
+are completed; a dedicated unit permanently modifies the shared version").
+
+Used by ``examples/cloud_async_vq.py`` and ``tests/test_async_runtime.py``;
+straggler injection (per-worker delay multipliers) quantifies the scheme's
+tolerance claim on a real thread pool rather than a model of one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.kernels import ref as kref
+
+
+class BlobStore:
+    """Versioned shared-value store (the Azure-blob stand-in).
+
+    ``put`` installs a new version; ``get`` returns (version, value).
+    Reads and writes are atomic but unsynchronized with each other — exactly
+    the consistency the paper's reducer/worker protocol needs (workers may
+    read a slightly stale shared version; that IS eq. 9)."""
+
+    def __init__(self, value: np.ndarray):
+        self._lock = threading.Lock()
+        self._value = value.copy()
+        self._version = 0
+
+    def get(self) -> tuple[int, np.ndarray]:
+        with self._lock:
+            return self._version, self._value.copy()
+
+    def put(self, value: np.ndarray) -> int:
+        with self._lock:
+            self._value = value
+            self._version += 1
+            return self._version
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    points: int = 0
+    pushes: int = 0
+    stale_reads: int = 0
+
+
+def run_async_vq(data: np.ndarray, w0: np.ndarray, *, tau: int = 10,
+                 duration_s: float = 2.0, eps0: float = 0.5,
+                 decay: float = 1.0,
+                 comm_delay_s: float | Callable[[int], float] = 0.0,
+                 straggler: dict[int, float] | None = None):
+    """Run M worker threads + 1 reducer for ``duration_s`` wall seconds.
+
+    data: (M, n, d) per-worker streams; w0: (kappa, d) initial prototypes.
+    ``comm_delay_s``: per-round communication latency (float or f(worker)).
+    ``straggler``: {worker_id: compute-slowdown-multiplier}.
+
+    Returns (w_final, per-worker WorkerStats, distortion_trace) where
+    distortion_trace is [(t_seconds, distortion-of-shared-version), ...].
+    """
+    m, n, d = data.shape
+    store = BlobStore(np.asarray(w0, np.float32))
+    inbox: queue.Queue = queue.Queue()
+    stop = threading.Event()
+    stats = [WorkerStats() for _ in range(m)]
+    global_step = [0]  # drives the shared Robbins-Monro schedule
+    step_lock = threading.Lock()
+
+    def eps_for() -> float:
+        with step_lock:
+            global_step[0] += 1
+            t = global_step[0]
+        return eps0 / (1.0 + decay * t)
+
+    def delay_of(i: int) -> float:
+        return comm_delay_s(i) if callable(comm_delay_s) else comm_delay_s
+
+    def worker(i: int) -> None:
+        rng = np.random.default_rng(i)
+        version, w = store.get()
+        delta = np.zeros_like(w)
+        slow = (straggler or {}).get(i, 1.0)
+        pos = 0
+        while not stop.is_set():
+            # --- tau local sequential VQ steps (eq. 1) -------------------
+            for _ in range(tau):
+                z = data[i, pos % n]
+                pos += 1
+                dist = np.sum((w - z) ** 2, axis=1)
+                l = int(np.argmin(dist))
+                step = eps_for() * (w[l] - z)
+                w[l] -= step
+                delta[l] += step
+                stats[i].points += 1
+                if slow > 1.0:
+                    time.sleep(1e-5 * (slow - 1.0))
+            # --- push delta, pull shared (no barrier; eq. 9) -------------
+            if delay_of(i):
+                time.sleep(delay_of(i))
+            inbox.put((i, delta.copy()))
+            stats[i].pushes += 1
+            new_version, w_srd = store.get()
+            if new_version == version:
+                stats[i].stale_reads += 1
+            version = new_version
+            # replay local displacement since push on top of the download —
+            # here the push is synchronous-with-pull so the replay is empty;
+            # the reducer's merge of OUR delta may not be in w_srd yet,
+            # which is exactly the paper's stale-read tolerance.
+            w = w_srd
+            delta = np.zeros_like(w)
+
+    def reducer() -> None:
+        while not stop.is_set() or not inbox.empty():
+            try:
+                _, delta = inbox.get(timeout=0.01)
+            except queue.Empty:
+                continue
+            _, w_srd = store.get()
+            store.put(w_srd - delta)  # eq. (9) 4th line, one message at a time
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(m)]
+    red = threading.Thread(target=reducer)
+    eval_data = data.reshape(-1, d)[: min(4096, m * n)]
+    # warm the distortion jit and record the t=0 baseline BEFORE any work
+    d0 = float(kref.distortion_ref(eval_data, w0))
+    trace = [(0.0, d0)]
+    t0 = time.time()
+    red.start()
+    for th in threads:
+        th.start()
+    while time.time() - t0 < duration_s:
+        time.sleep(duration_s / 20)
+        _, w_now = store.get()
+        trace.append((time.time() - t0,
+                      float(kref.distortion_ref(eval_data, w_now))))
+    stop.set()
+    for th in threads:
+        th.join()
+    red.join()
+    _, w_final = store.get()
+    return w_final, stats, trace

@@ -1,0 +1,139 @@
+"""Asynchronous delta-merge scheme with stochastic delays — paper Section 4, eq. (9).
+
+Faithful discrete-event simulation of the cloud model:
+
+  * every wall tick, every worker processes one data point (workers are
+    concurrent — one tick == one point per worker);
+  * each worker runs communication "rounds" back-to-back: as soon as its
+    previous upload+download completes it starts the next one.  A round takes
+    ``tau + G`` ticks where ``G ~ Geometric(p_delay)`` models the random
+    communication cost (the paper's geometric-delay model);
+  * when worker ``i``'s round completes at tick ``t`` (``t == tau^i(t)``):
+      - the delta it UPLOADED during that round — the displacement over its
+        *previous* inter-completion window — lands on the reducer:
+        ``w_srd <- w_srd - Delta^i_{prev window}``          (4th line of eq. 9)
+      - the shared version it DOWNLOADED during the round — the reducer state
+        at its previous completion ``tau^i(t-1)`` — replaces its local
+        version, with its since-then local displacement replayed on top:
+        ``w^i(t+1) = w_srd(tau^i(t-1)) - Delta^i_{tau^i(t-1) -> t}``  (3rd line)
+  * there is no synchronization barrier anywhere; the reducer ("dedicated
+    unit") merges whatever arrives whenever it arrives.
+
+The whole simulation is a single ``lax.scan`` over wall ticks with masked
+per-worker updates, so it jits and runs fast for the paper's scales
+(M <= 32, n ~ 1e4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vq
+
+
+class AsyncResult(NamedTuple):
+    w_shared: jax.Array      # (kappa, d) final reducer state
+    wall_ticks: jax.Array    # (n_evals,)
+    distortion: jax.Array    # (n_evals,) eq. (2) of w_srd over wall time
+
+
+class _SimState(NamedTuple):
+    w_workers: jax.Array     # (M, kappa, d) local versions w^i(t)
+    w_shared: jax.Array      # (kappa, d)    reducer state w_srd(t)
+    snapshot: jax.Array      # (M, kappa, d) shared version downloaded at last completion
+    delta_cur: jax.Array     # (M, kappa, d) Delta^i since last completion
+    delta_inflight: jax.Array  # (M, kappa, d) Delta^i uploaded, lands at next completion
+    next_done: jax.Array     # (M,) int32 tick when current round completes
+    t: jax.Array             # scalar int32 wall tick
+
+
+def _round_lengths(key: jax.Array, shape, *, tau: int, p_delay: float) -> jax.Array:
+    """tau + Geometric(p_delay) extra ticks (0 extra when p_delay -> 1)."""
+    u = jax.random.uniform(key, shape, minval=1e-7, maxval=1.0)
+    geom = jnp.floor(jnp.log(u) / jnp.log1p(-p_delay)).astype(jnp.int32)
+    return tau + jnp.maximum(geom, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tau", "p_delay", "eps0", "decay", "eval_every")
+)
+def scheme_async(w0: jax.Array, data: jax.Array, eval_data: jax.Array,
+                 key: jax.Array, *, tau: int, p_delay: float = 0.5,
+                 eps0: float = 0.5, decay: float = 1.0,
+                 eval_every: int = 10) -> AsyncResult:
+    """Run eq. (9) for ``n`` wall ticks (n = data.shape[1]).
+
+    data: (M, n, d); eval_data: (M, n_eval, d); key: PRNG for round delays.
+    ``p_delay`` is the geometric parameter: mean extra delay (1-p)/p ticks.
+    """
+    m, n, _ = data.shape
+    kappa = w0.shape[0]
+
+    # Pre-sample enough round lengths: each round is >= tau ticks, so at most
+    # ceil(n / tau) + 1 rounds per worker.
+    max_rounds = n // tau + 2
+    lengths = _round_lengths(key, (m, max_rounds), tau=tau, p_delay=p_delay)
+    done_at = jnp.cumsum(lengths, axis=1)  # (M, max_rounds) completion ticks
+    round_idx0 = jnp.zeros((m,), jnp.int32)
+
+    def tick(carry, z_t):
+        state, round_idx = carry
+        t = state.t
+        eps = vq.default_steps(t + 1, eps0=eps0, decay=decay)
+
+        # --- local VQ step on every worker (1st line of eq. 9) -------------
+        step = eps * jax.vmap(vq.H)(z_t, state.w_workers)  # (M, kappa, d)
+        w_temp = state.w_workers - step
+        delta_cur = state.delta_cur + step
+
+        # --- completions: workers whose round finishes at this tick --------
+        done = state.next_done == t  # (M,) bool
+        donef = done.astype(w0.dtype)[:, None, None]
+
+        # uploaded (in-flight) deltas land on the reducer  (4th line of eq. 9)
+        w_shared = state.w_shared - jnp.sum(donef * state.delta_inflight, axis=0)
+
+        # completed workers: adopt downloaded snapshot + replay local delta
+        # (3rd line of eq. 9); others keep w_temp (2nd line).
+        w_adopt = state.snapshot - delta_cur
+        w_workers = jnp.where(donef > 0, w_adopt, w_temp)
+
+        # completed workers start a new round: snapshot the (just-merged)
+        # shared version, move delta_cur into the upload slot, reset.
+        snapshot = jnp.where(donef > 0, w_shared[None], state.snapshot)
+        delta_inflight = jnp.where(donef > 0, delta_cur, state.delta_inflight)
+        delta_cur = jnp.where(donef > 0, jnp.zeros_like(delta_cur), delta_cur)
+        round_idx = round_idx + done.astype(jnp.int32)
+        next_done = jnp.where(
+            done, jnp.take_along_axis(done_at, round_idx[:, None], axis=1)[:, 0],
+            state.next_done,
+        )
+
+        new = _SimState(w_workers, w_shared, snapshot, delta_cur,
+                        delta_inflight, next_done, t + 1)
+        return (new, round_idx), w_shared
+
+    init = _SimState(
+        w_workers=jnp.broadcast_to(w0, (m, kappa, w0.shape[1])),
+        w_shared=w0,
+        snapshot=jnp.broadcast_to(w0, (m, kappa, w0.shape[1])),
+        delta_cur=jnp.zeros((m, kappa, w0.shape[1]), w0.dtype),
+        delta_inflight=jnp.zeros((m, kappa, w0.shape[1]), w0.dtype),
+        next_done=done_at[:, 0],
+        t=jnp.asarray(0, jnp.int32),
+    )
+    (final, _), shared_traj = jax.lax.scan(
+        tick, (init, round_idx0), data.transpose(1, 0, 2)
+    )
+
+    # evaluate the shared version every ``eval_every`` ticks
+    eval_ticks = jnp.arange(eval_every - 1, n, eval_every)
+    curve = jax.vmap(lambda w: vq.distortion_multi(eval_data, w))(
+        shared_traj[eval_ticks]
+    )
+    return AsyncResult(w_shared=final.w_shared, wall_ticks=eval_ticks + 1,
+                       distortion=curve)

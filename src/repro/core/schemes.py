@@ -1,0 +1,105 @@
+"""Synchronous parallelization schemes — paper Sections 2 and 3.
+
+Both schemes run ``M`` concurrent sequential-VQ executions (one per worker,
+``vmap`` over the worker axis) and synchronize every ``tau`` processed points:
+
+  * ``scheme_average``  (Section 2, eq. 3):  w_srd = mean_i w^i(tau) — the
+    intuitive scheme the paper shows does NOT speed up convergence.
+  * ``scheme_delta``    (Section 3, eq. 8):  w_srd <- w_srd - sum_i Delta^i —
+    displacement merging, which does.
+
+Wall-clock semantics: workers are concurrent, so one synchronization window
+costs ``tau`` ticks of wall time regardless of M (communications are
+instantaneous here, as in the paper's simulated architecture; delays are the
+subject of ``async_vq``).  The returned curves are indexed by wall tick.
+
+These functions are also the reference oracles for the distributed
+``repro.core.merge`` strategies used by the training framework.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vq
+
+
+class SchemeResult(NamedTuple):
+    w_shared: jax.Array      # (kappa, d) final shared prototypes
+    wall_ticks: jax.Array    # (n_windows,) wall time at each sync point
+    distortion: jax.Array    # (n_windows,) eq. (2) criterion of w_srd at each sync
+
+
+def _windows(data: jax.Array, tau: int) -> jax.Array:
+    """(M, n, d) -> (n_windows, M, tau, d), dropping the ragged tail."""
+    m, n, d = data.shape
+    n_windows = n // tau
+    usable = data[:, : n_windows * tau, :]
+    return usable.reshape(m, n_windows, tau, d).transpose(1, 0, 2, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "eps0", "decay"))
+def scheme_average(w0: jax.Array, data: jax.Array, eval_data: jax.Array,
+                   *, tau: int, eps0: float = 0.5, decay: float = 1.0) -> SchemeResult:
+    """Paper Section 2 (eq. 3): synchronize by AVERAGING worker versions.
+
+    data: (M, n, d) — worker-local streams. eval_data: (M, n_eval, d) for the
+    eq. (2) criterion.  All workers share the step schedule eps_t indexed by
+    their local step count (t advances by tau per window).
+    """
+    windows = _windows(data, tau)
+
+    def window_body(carry, zwin):
+        w_srd, t0 = carry
+        # every worker starts the window from the shared version
+        _, w_finals = jax.vmap(
+            lambda z: vq.window_displacement(w_srd, z, t0, eps0=eps0, decay=decay)
+        )(zwin)
+        w_srd = jnp.mean(w_finals, axis=0)  # eq. (3)
+        t0 = t0 + tau
+        return (w_srd, t0), (t0, vq.distortion_multi(eval_data, w_srd))
+
+    (w_srd, _), (ticks, curve) = jax.lax.scan(
+        window_body, (w0, jnp.asarray(0, jnp.int32)), windows
+    )
+    return SchemeResult(w_shared=w_srd, wall_ticks=ticks, distortion=curve)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "eps0", "decay"))
+def scheme_delta(w0: jax.Array, data: jax.Array, eval_data: jax.Array,
+                 *, tau: int, eps0: float = 0.5, decay: float = 1.0) -> SchemeResult:
+    """Paper Section 3 (eq. 8): merge by applying the SUM of displacements.
+
+    w_srd <- w_srd - sum_j Delta^j_{t-tau->t};  workers restart from w_srd.
+    """
+    windows = _windows(data, tau)
+
+    def window_body(carry, zwin):
+        w_srd, t0 = carry
+        deltas, _ = jax.vmap(
+            lambda z: vq.window_displacement(w_srd, z, t0, eps0=eps0, decay=decay)
+        )(zwin)
+        w_srd = w_srd - jnp.sum(deltas, axis=0)  # eq. (8) reducing phase
+        t0 = t0 + tau
+        return (w_srd, t0), (t0, vq.distortion_multi(eval_data, w_srd))
+
+    (w_srd, _), (ticks, curve) = jax.lax.scan(
+        window_body, (w0, jnp.asarray(0, jnp.int32)), windows
+    )
+    return SchemeResult(w_shared=w_srd, wall_ticks=ticks, distortion=curve)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "eps0", "decay"))
+def scheme_sequential(w0: jax.Array, data: jax.Array, eval_data: jax.Array,
+                      *, tau: int, eps0: float = 0.5, decay: float = 1.0) -> SchemeResult:
+    """M=1 baseline with the same evaluation cadence (every tau points).
+
+    data: (n, d) single stream (or (1, n, d)).
+    """
+    stream = data[None] if data.ndim == 2 else data
+    assert stream.shape[0] == 1, "sequential baseline takes a single stream"
+    return scheme_delta(w0, stream, eval_data, tau=tau, eps0=eps0, decay=decay)

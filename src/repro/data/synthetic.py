@@ -1,0 +1,64 @@
+"""Synthetic data generators.
+
+``mixture_data`` follows the family used in the paper's experiments (Patra's
+thesis Section 4.2: random centers with local noise, uniformly scattered mass):
+an isotropic Gaussian mixture over ``n_centers`` uniform random centers in
+``[0, 1]^d``.  The paper notes its conclusions are "more sensitive to the loss
+function smoothness and convexity than to the data choice" — this generator
+reproduces exactly that non-smooth, non-convex quantization landscape.
+
+``split_workers`` shards a stream across M workers the way the paper does
+(dataset split among the local memories of the computing instances).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mixture_data(key: jax.Array, *, n: int, d: int, n_centers: int = 10,
+                 noise: float = 0.05, dtype=jnp.float32) -> jax.Array:
+    """(n, d) samples from a uniform-center isotropic Gaussian mixture."""
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.uniform(kc, (n_centers, d), dtype=dtype)
+    assign = jax.random.randint(ka, (n,), 0, n_centers)
+    eps = noise * jax.random.normal(kn, (n, d), dtype=dtype)
+    return centers[assign] + eps
+
+
+def split_workers(data: jax.Array, m: int) -> jax.Array:
+    """(n, d) -> (m, n // m, d): disjoint per-worker streams (paper setup)."""
+    n = data.shape[0] // m * m
+    return data[:n].reshape(m, -1, data.shape[-1])
+
+
+def replicate_stream(key: jax.Array, m: int, *, n: int, d: int,
+                     **kw) -> jax.Array:
+    """(m, n, d): m i.i.d. streams of length n from the same mixture.
+
+    Matches the paper's speed-up experiments where every worker owns n local
+    points (total data grows with M).
+    """
+    keys = jax.random.split(key, m + 1)
+    centers_key = keys[0]
+    # all workers draw from the SAME mixture: fix the centers across workers
+    d_ = d
+
+    def one(k):
+        ka, kn = jax.random.split(k)
+        kc = centers_key
+        n_centers = kw.get("n_centers", 10)
+        noise = kw.get("noise", 0.05)
+        centers = jax.random.uniform(kc, (n_centers, d_))
+        assign = jax.random.randint(ka, (n,), 0, n_centers)
+        eps = noise * jax.random.normal(kn, (n, d_))
+        return centers[assign] + eps
+
+    return jax.vmap(one)(keys[1:])
+
+
+def kmeanspp_init(key: jax.Array, data: jax.Array, kappa: int) -> jax.Array:
+    """k-means++ style initialization used for w(0): sample kappa points."""
+    idx = jax.random.choice(key, data.shape[0], (kappa,), replace=False)
+    return data[idx]

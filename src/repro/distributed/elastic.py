@@ -1,0 +1,89 @@
+"""Elastic scaling / failure handling for 1000+-node deployments.
+
+The paper's async scheme (S3) is itself the straggler story: a slow worker
+delays only its own delta.  This module supplies the surrounding machinery a
+production deployment needs when workers *disappear* rather than just slow
+down:
+
+  * ``plan_remesh``: given the surviving host set, pick the largest valid
+    (data, model) mesh the framework's sharding rules support, biased to
+    keep the TP axis intact (TP size changes invalidate head shardings;
+    data-axis shrink only re-spreads FSDP shards — cheap).
+  * ``ElasticTrainer``-style restart flow: on failure, rebuild the mesh from
+    survivors, ``Checkpointer.restore`` onto the new shardings (elastic by
+    construction — leaves are stored unsharded), and continue from the
+    step-indexed pipeline (no data-iterator state to recover).
+  * ``merge_weights``: the paper-faithful rule for integrating a returning
+    or late worker's delta (sum displacement into the shared version —
+    eq. 8 applied to the straggler's stale window; optionally scaled by
+    staleness as in [4], Zinkevich et al.).
+
+The decision logic is pure and unit-tested; the device-level rebuild is a
+thin wrapper over jax.make_mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    data: int
+    model: int
+    dropped_hosts: int
+    tp_preserved: bool
+
+
+def plan_remesh(n_devices: int, *, prev_data: int, prev_model: int
+                ) -> RemeshPlan:
+    """Largest (data, model) grid over the survivors.
+
+    Prefers keeping ``model`` (TP) intact: params are TP-sharded by
+    divisibility rules, so changing TP width can invalidate head shardings,
+    while shrinking ``data`` only re-spreads DP/FSDP shards.
+    """
+    if n_devices >= prev_model and prev_model > 0:
+        data = n_devices // prev_model
+        return RemeshPlan(data=data, model=prev_model,
+                          dropped_hosts=n_devices - data * prev_model,
+                          tp_preserved=True)
+    # degenerate: fewer devices than the TP width — fall back to the largest
+    # power-of-two TP that fits
+    model = 1
+    while model * 2 <= n_devices:
+        model *= 2
+    data = n_devices // model
+    return RemeshPlan(data=data, model=model,
+                      dropped_hosts=n_devices - data * model,
+                      tp_preserved=False)
+
+
+def build_mesh(plan: RemeshPlan) -> jax.sharding.Mesh:
+    n = plan.data * plan.model
+    devices = jax.devices()[:n]
+    import numpy as np
+    grid = np.array(devices).reshape(plan.data, plan.model)
+    return jax.sharding.Mesh(grid, ("data", "model"))
+
+
+def staleness_scale(delay_windows: int, *, gamma: float = 0.5) -> float:
+    """Weight for a late worker's delta: 1 / (1 + delay)^gamma.
+
+    delay=0 (on-time) => 1.0 — the paper's eq. (9) applies deltas at full
+    weight one round late; heavier staleness is damped as in asynchronous
+    SGD practice ([4])."""
+    return float(1.0 / (1.0 + delay_windows) ** gamma)
+
+
+def merge_late_delta(w_shared, delta, *, delay_windows: int = 0,
+                     gamma: float = 0.5):
+    """Paper eq. (8)/(9) merge of one (possibly stale) worker delta."""
+    import jax.numpy as jnp
+    s = staleness_scale(delay_windows, gamma=gamma)
+    return jax.tree.map(
+        lambda w, d: (w.astype(jnp.float32)
+                      - s * d.astype(jnp.float32)).astype(w.dtype),
+        w_shared, delta)

@@ -1,0 +1,203 @@
+"""PartitionSpec assignment for every param / optimizer / batch / cache leaf.
+
+Policy (see DESIGN.md §5):
+  * TP ('model' axis): attention head dims (only when head counts divide the
+    axis — GQA archs like starcoder2 (36H) or hymba (25H) keep attention
+    replicated and shard the MLP instead), d_ff / d_inner, expert count,
+    vocab.
+  * FSDP ('data' axis, when cfg asks for it): one additional non-TP dim per
+    weight leaf — XLA turns this into per-layer all-gather inside the scan
+    (ZeRO-3) and reduce-scatter of the matching grads.
+  * DP ('pod', 'data'): the batch dim of inputs.
+  * decode caches: batch over DP when divisible, sequence over 'model'
+    (+ leftover DP axes when batch can't shard — the long_500k b=1 case).
+
+Everything is derived from (ModelConfig, mesh) — no per-arch hand tables.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import api as model_api
+from repro.models.common import ModelConfig, make_rules, ShardingRules
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _wspec(r: ShardingRules, shape: tuple[int, ...], tp_dim: int | None,
+           *, has_layer_dim: bool = True) -> P:
+    """Spec for a weight leaf: TP on ``tp_dim`` (already validated), FSDP on
+    the first other (non-layer) dim divisible by the fsdp axis."""
+    spec: list = [None] * len(shape)
+    if tp_dim is not None:
+        spec[tp_dim] = r.tp
+    start = 1 if has_layer_dim else 0
+    if r.fsdp:
+        for i in range(start, len(shape)):
+            if i != tp_dim and shape[i] % r.fsdp_size == 0 and shape[i] >= r.fsdp_size:
+                spec[i] = r.fsdp
+                break
+    return P(*spec)
+
+
+def _block_specs(cfg: ModelConfig, r: ShardingRules, blk: dict,
+                 *, cross_heads: bool = False) -> dict:
+    """Specs for one (stacked-L) block dict, keyed by leaf name."""
+    hq_ok = r.heads(cfg.n_heads) is not None
+    hkv_ok = r.heads(cfg.n_kv_heads) is not None if cfg.n_kv_heads else False
+    di_ok = r.dim(cfg.d_inner) is not None
+    ff_ok = r.dim(cfg.d_ff) is not None if cfg.d_ff else False
+    e_ok = r.dim(cfg.n_experts) is not None if cfg.n_experts else False
+    h_ok = r.dim(cfg.ssm_heads) is not None if cfg.ssm_state else False
+
+    out = {}
+    for name, leaf in blk.items():
+        shape = tuple(np.shape(leaf)) if not hasattr(leaf, "shape") \
+            else tuple(leaf.shape)
+        nd = len(shape)
+        if name in ("wq", "cwq", "cwk", "cwv"):
+            out[name] = _wspec(r, shape, 2 if hq_ok else None)
+        elif name in ("wk", "wv"):
+            out[name] = _wspec(r, shape, 2 if hkv_ok else None)
+        elif name in ("wo", "cwo"):
+            out[name] = _wspec(r, shape, 1 if hq_ok else None)
+        elif name in ("w_gate", "w_up"):
+            # dense: (L, D, F) TP on F; moe: (L, E, D, F) TP on E
+            tp = (1 if e_ok else None) if nd == 4 else (2 if ff_ok else None)
+            out[name] = _wspec(r, shape, tp)
+        elif name == "w_down":
+            tp = (1 if e_ok else None) if nd == 4 else (1 if ff_ok else None)
+            out[name] = _wspec(r, shape, tp)
+        elif name == "router":
+            out[name] = _wspec(r, shape, 2 if e_ok else None)
+        elif name in ("in_z", "in_x"):
+            out[name] = _wspec(r, shape, 2 if di_ok else None)
+        elif name == "out_proj":
+            out[name] = _wspec(r, shape, 1 if di_ok else None)
+        elif name == "conv_x":
+            out[name] = _wspec(r, shape, 2 if di_ok else None)
+        elif name == "in_dt":
+            out[name] = _wspec(r, shape, 2 if h_ok else None)
+        elif name in ("in_bc", "conv_bc"):
+            out[name] = _wspec(r, shape, None)
+        elif name in ("A_log", "D", "dt_bias"):
+            out[name] = P(None, r.tp) if h_ok else P(None, None)
+        else:  # norms and anything small: replicated
+            out[name] = P(*([None] * nd))
+    return out
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, *, use_fsdp: bool) -> dict:
+    """Pytree of PartitionSpec matching ``api.init(cfg, key)``'s structure."""
+    r = make_rules(mesh, use_fsdp=use_fsdp)
+    api = model_api.get_api(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+
+    v_ok = r.dim(cfg.vocab) is not None
+    d_ok = r.dim(cfg.d_model) is not None
+    embed_spec = _wspec(
+        r, (cfg.vocab, cfg.d_model), 0 if v_ok else (1 if d_ok else None),
+        has_layer_dim=False)
+
+    specs: dict = {}
+    for key, sub in shapes.items():
+        if key == "embed":
+            specs[key] = embed_spec
+        elif key == "lm_head":
+            specs[key] = _wspec(r, (cfg.d_model, cfg.vocab),
+                                1 if v_ok else None, has_layer_dim=False)
+        elif key in ("blocks", "enc_blocks", "dec_blocks"):
+            specs[key] = _block_specs(cfg, r, sub)
+        else:  # final_norm, enc_norm, ...
+            specs[key] = P(*([None] * len(sub.shape)))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: dict) -> dict:
+    """Specs for a train/prefill input batch: batch dim over the DP axes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    dp_size = int(np.prod([sizes[a] for a in dp])) if dp else 1
+
+    def spec_for(leaf):
+        b = leaf.shape[0]
+        first = dp if dp_size and b % dp_size == 0 else ()
+        rest = [None] * (len(leaf.shape) - 1)
+        return P(first if first else None, *rest)
+
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache: dict) -> dict:
+    """Decode-cache specs.  Leaves carry a leading L dim (layer-scanned)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    r = make_rules(mesh, use_fsdp=False)
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    dp_size = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    tp_size = sizes.get("model", 1)
+
+    def kv_spec(leaf):  # (L, B, S, Hkv, Dh)
+        _, b, s = leaf.shape[:3]
+        b_axes = dp if b % max(dp_size, 1) == 0 and dp_size > 1 else ()
+        s_axes = ["model"] if "model" in sizes else []
+        if not b_axes:  # long-context b=1: fold DP axes into the seq shard
+            s_axes = list(dp) + s_axes
+        s_total = int(np.prod([sizes[a] for a in s_axes])) if s_axes else 1
+        if s_total == 0 or s % max(s_total, 1) != 0:
+            s_axes = []
+        return P(None, b_axes if b_axes else None,
+                 tuple(s_axes) if s_axes else None, None, None)
+
+    def generic(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.ndim >= 3 and leaf.shape[1] % max(dp_size, 1) == 0 and dp_size > 1:
+            # (L, B, ...): batch over DP
+            rest = [None] * (leaf.ndim - 2)
+            return P(None, dp, *rest)
+        return P(*([None] * leaf.ndim))
+
+    specs = {}
+    for name, leaf in cache.items():
+        if name in ("k", "v", "ck", "cv"):
+            specs[name] = kv_spec(leaf)
+        elif name == "ssm":  # (L, B, H, P, N)
+            h = leaf.shape[2]
+            h_ax = "model" if h % tp_size == 0 and tp_size > 1 else None
+            b_ax = dp if leaf.shape[1] % max(dp_size, 1) == 0 and dp_size > 1 else None
+            specs[name] = P(None, b_ax, h_ax, None, None)
+        elif name in ("conv_x", "conv_bc"):  # (L, B, W-1, C)
+            c = leaf.shape[3]
+            c_ax = "model" if c % tp_size == 0 and tp_size > 1 else None
+            b_ax = dp if leaf.shape[1] % max(dp_size, 1) == 0 and dp_size > 1 else None
+            specs[name] = P(None, b_ax, None, c_ax)
+        else:
+            specs[name] = generic(leaf)
+    return specs
+
+
+def named(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_specs_like(param_specs_tree, opt_state):
+    """Specs for an AdamState/SGDState: moments mirror their param's spec."""
+    from repro.optim.optimizers import AdamState, SGDState
+    if isinstance(opt_state, AdamState):
+        return AdamState(mu=param_specs_tree, nu=param_specs_tree, count=P())
+    if isinstance(opt_state, SGDState):
+        mom = param_specs_tree if opt_state.momentum is not None else None
+        return SGDState(momentum=mom, count=P())
+    raise TypeError(type(opt_state))

@@ -1,0 +1,75 @@
+"""Jit'd public wrappers around the Pallas VQ kernels.
+
+Handles padding to MXU-aligned block multiples, picks interpret mode
+automatically off-TPU (the kernel body then runs as pure-python/jnp on CPU —
+bit-identical semantics, which is what the allclose tests exercise), and
+exposes the same signatures as the ``ref.py`` oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import vq_assign as _k
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def vq_assign(z: jax.Array, w: jax.Array, *, bm: int = 128, bk: int = 128,
+              interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Nearest-prototype assignment; same contract as ``ref.vq_assign_ref``."""
+    interpret = _interpret_default() if interpret is None else interpret
+    batch, kappa = z.shape[0], w.shape[0]
+    bm_ = min(bm, max(8, batch))
+    zp = _pad_rows(z, bm_)
+    wp = _pad_rows(w, bk)
+    assign, mind = _k.vq_assign_pallas(zp, wp, bm=bm_, bk=min(bk, wp.shape[0]),
+                                       kappa_valid=kappa, interpret=interpret)
+    return assign[:batch], mind[:batch]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def vq_delta(z: jax.Array, w: jax.Array, *, bm: int = 128,
+             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Fused minibatch displacement stats; contract of ``ref.vq_delta_ref``."""
+    interpret = _interpret_default() if interpret is None else interpret
+    batch = z.shape[0]
+    bm_ = min(bm, max(8, batch))
+    zp = _pad_rows(z, bm_)
+    counts, zsum, _ = _k.vq_delta_pallas(zp, w, bm=bm_, n_valid=batch,
+                                         interpret=interpret)
+    return counts, zsum
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def distortion(z: jax.Array, w: jax.Array, *, bm: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """Mean min-distance (paper eq. 2 per worker) via the fused kernel."""
+    interpret = _interpret_default() if interpret is None else interpret
+    batch = z.shape[0]
+    bm_ = min(bm, max(8, batch))
+    zp = _pad_rows(z, bm_)
+    _, _, mind = _k.vq_delta_pallas(zp, w, bm=bm_, n_valid=batch,
+                                    interpret=interpret)
+    return jnp.sum(mind) / batch
+
+
+def vq_minibatch_step(z: jax.Array, w: jax.Array, eps: jax.Array,
+                      *, interpret: bool | None = None) -> jax.Array:
+    """One fused minibatch VQ update: w <- w - (eps/|B|) * (counts*w - zsum)."""
+    counts, zsum = vq_delta(z, w, interpret=interpret)
+    delta = counts[:, None] * w.astype(jnp.float32) - zsum
+    return (w.astype(jnp.float32) - (eps / z.shape[0]) * delta).astype(w.dtype)

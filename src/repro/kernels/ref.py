@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels — the ground truth for allclose tests."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vq_assign_ref(z: jax.Array, w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Nearest-prototype assignment.
+
+    z: (batch, d), w: (kappa, d) ->
+      assign: (batch,) int32 argmin_l ||z - w_l||^2
+      mindist: (batch,) float32 min_l ||z - w_l||^2
+    """
+    z32 = z.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    z2 = jnp.sum(z32 * z32, axis=-1, keepdims=True)
+    w2 = jnp.sum(w32 * w32, axis=-1)
+    d2 = z2 - 2.0 * (z32 @ w32.T) + w2[None, :]
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.min(d2, axis=-1)
+
+
+def vq_delta_ref(z: jax.Array, w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused minibatch VQ displacement (what the training hot loop needs).
+
+    Returns (counts, zsum):
+      counts: (kappa,)   number of batch points assigned to each prototype
+      zsum:   (kappa, d) sum of the points assigned to each prototype
+    The displacement is then ``delta = counts[:, None] * w - zsum`` and the
+    minibatch VQ update is ``w <- w - (eps / batch) * delta``.
+    """
+    assign, _ = vq_assign_ref(z, w)
+    onehot = jax.nn.one_hot(assign, w.shape[0], dtype=jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    zsum = onehot.T @ z.astype(jnp.float32)
+    return counts, zsum
+
+
+def distortion_ref(z: jax.Array, w: jax.Array) -> jax.Array:
+    """Mean over the batch of min_l ||z - w_l||^2 (paper eq. 2 per worker)."""
+    _, mind = vq_assign_ref(z, w)
+    return jnp.mean(mind)

@@ -1,0 +1,53 @@
+"""Family dispatcher — one uniform API over all model families."""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+
+from repro.models import encdec, transformer
+from repro.models.common import ModelConfig
+
+
+class ModelAPI(NamedTuple):
+    init: Callable
+    forward: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    decode_step: Callable
+    prefill: Callable          # (params, batch, max_len) -> (logits, cache)
+
+
+def _encdec_prefill(cfg, params, batch, max_len):
+    cache = encdec.init_cache(cfg, params, batch["frames"], max_len)
+    logits = encdec.forward(cfg, params, batch)[:, -1]
+    # teacher-forced prompt positions are filled by the caller's decode loop;
+    # the decoder self-cache starts empty (whisper prompts are short).
+    return logits, cache
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            init=lambda key: encdec.init(cfg, key),
+            forward=lambda params, batch: encdec.forward(cfg, params, batch),
+            loss_fn=lambda params, batch: encdec.loss_fn(cfg, params, batch),
+            init_cache=lambda params, batch, max_len: encdec.init_cache(
+                cfg, params, batch["frames"], max_len),
+            decode_step=lambda params, cache, tokens: encdec.decode_step(
+                cfg, params, cache, tokens),
+            prefill=lambda params, batch, max_len: _encdec_prefill(
+                cfg, params, batch, max_len),
+        )
+    return ModelAPI(
+        init=lambda key: transformer.init(cfg, key),
+        forward=lambda params, batch: transformer.forward(cfg, params, batch),
+        loss_fn=lambda params, batch: transformer.loss_fn(cfg, params, batch),
+        init_cache=lambda params, batch, max_len: transformer.init_cache(
+            cfg, batch["tokens"].shape[0], max_len),
+        decode_step=lambda params, cache, tokens: transformer.decode_step(
+            cfg, params, cache, tokens),
+        prefill=lambda params, batch, max_len: transformer.prefill(
+            cfg, params, batch, max_len),
+    )

@@ -1,0 +1,270 @@
+"""Shared model machinery: config dataclass, init, norms, RoPE, sharding rules.
+
+All models are pure-functional pytrees: ``init(cfg, key) -> params``,
+``apply(cfg, params, batch) -> logits``.  Layer stacks are stored stacked on a
+leading ``L`` dim and executed with ``jax.lax.scan`` (+ per-layer remat), which
+keeps the HLO size independent of depth — essential for the 512-device
+dry-run compiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / hymba) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    # --- hybrid (hymba) ---
+    window: int = 0                # sliding-window size; 0 = full attention
+    global_every: int = 0          # every k-th layer is full-attention
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_frames: int = 0        # stub frontend: precomputed frame embeddings
+    # --- vlm (internvl2) ---
+    img_tokens: int = 0            # stub frontend: precomputed patch embeddings
+    # --- misc ---
+    rope_theta: float = 10000.0
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:      # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding included once if tied)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        hq, hkv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        per_layer = 0
+        if self.family in ("dense", "moe", "encdec", "vlm", "hybrid"):
+            per_layer += d * hq * dh + 2 * d * hkv * dh + hq * dh * d  # attn
+            per_layer += 2 * d  # norms
+        if self.family == "moe":
+            per_layer += d * self.n_experts  # router
+            per_layer += self.n_experts * 3 * d * ff
+        elif self.family in ("dense", "encdec", "vlm"):
+            per_layer += 3 * d * ff
+        elif self.family == "hybrid":
+            per_layer += 3 * d * ff
+            per_layer += self._ssm_params() + d
+        if self.family == "ssm":
+            per_layer += self._ssm_params() + d
+        total = self.n_layers * per_layer
+        total += v * d * (1 if self.tie_embeddings else 2)
+        total += d  # final norm
+        if self.family == "encdec":
+            enc_layer = 4 * d * d + 3 * d * ff + 2 * d
+            cross = 4 * d * d + d
+            total += self.encoder_layers * enc_layer + self.n_layers * cross
+        return total
+
+    def _ssm_params(self) -> int:
+        di, n, h = self.d_inner, self.ssm_state, self.ssm_heads
+        # in_proj -> (z, x, B, C, dt), conv on (x,B,C), out_proj, A, D, dt_bias
+        return (self.d_model * (2 * di + 2 * n + h)
+                + self.ssm_conv * (di + 2 * n) + di * self.d_model + 3 * h)
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        dense = self.n_params() - self.n_layers * self.n_experts * 3 * d * ff
+        return dense + self.n_layers * self.top_k * 3 * d * ff
+
+
+# ---------------------------------------------------------------------------
+# run options (runtime knobs, not arch identity) — set by launchers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunOptions:
+    # Megatron-style sequence parallelism: shard the residual stream's T dim
+    # over the TP axis between blocks.  Cuts the scan's saved activations by
+    # tp_size (the dominant train-memory term); GSPMD inserts the
+    # all-gather / reduce-scatter pair around each attention/MLP.
+    seq_parallel: bool = True
+    # query-chunk size for the memory-efficient attention scan
+    q_chunk: int = 512
+    # the mesh sharding constraints should target (set by launchers; None
+    # disables all activation constraints, e.g. in single-device tests)
+    mesh: Any = None
+    # opt-in shard_map expert parallelism for MoE (EXPERIMENTS.md §Perf it.3)
+    moe_ep: bool = False
+
+
+_RUN_OPTIONS = RunOptions()
+
+
+def set_run_options(**kw) -> RunOptions:
+    for k, v in kw.items():
+        setattr(_RUN_OPTIONS, k, v)
+    return _RUN_OPTIONS
+
+
+def get_run_options() -> RunOptions:
+    return _RUN_OPTIONS
+
+
+def shard_heads(x: jax.Array) -> jax.Array:
+    """Head-parallel constraint on a (B, T, H, Dh) attention tensor.
+
+    Pins q/k/v to heads-over-'model' so the query-chunk scan runs with zero
+    per-chunk collectives (the all-gather of K/V happens once per layer,
+    hoisted out of the loop).  No-op if heads don't divide the TP axis."""
+    mesh = _RUN_OPTIONS.mesh
+    if mesh is None or x.ndim != 4 or "model" not in mesh.axis_names:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if x.shape[2] % sizes["model"] != 0:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    dp_total = 1
+    for a in dp:
+        dp_total *= sizes[a]
+    b_spec = dp if dp and x.shape[0] % dp_total == 0 else None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_spec, None, "model", None)))
+
+
+def shard_seq(x: jax.Array) -> jax.Array:
+    """Sequence-parallel constraint on a (B, T, D) residual-stream tensor.
+
+    No-op unless enabled, a mesh with a 'model' axis is current, and T
+    divides the axis.  (Decode tensors with T == 1 fall through.)
+    """
+    mesh = _RUN_OPTIONS.mesh
+    if not _RUN_OPTIONS.seq_parallel or x.ndim != 3 or mesh is None:
+        return x
+    if "model" not in mesh.axis_names:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    t = x.shape[1]
+    if t < 2 or t % sizes["model"] != 0:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    dp_total = 1
+    for a in dp:
+        dp_total *= sizes[a]
+    b_spec = dp if dp and x.shape[0] % dp_total == 0 else None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_spec, "model", None)))
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., T, H, Dh), positions: (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_dense(key: jax.Array, shape, dtype, *, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+# Logical axes; mapping to mesh axes depends on divisibility per-arch.
+#   "embed"  : d_model                    -> usually unsharded (residual stream)
+#   "vocab"  : vocabulary                 -> 'model' if divisible
+#   "heads"  : q-head count * head_dim    -> 'model' if n_heads % tp == 0
+#   "kv"     : kv-head count * head_dim   -> 'model' if n_kv_heads % tp == 0
+#   "mlp"    : d_ff / d_inner             -> 'model' if divisible
+#   "expert" : expert count               -> 'model' if divisible
+#   "layers" : stacked layer dim          -> never sharded
+#   "fsdp"   : extra param shard over 'data' (ZeRO-3) on the given dim
+
+
+def axis_ok(size: int, mesh_axis_size: int) -> bool:
+    return mesh_axis_size > 0 and size % mesh_axis_size == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Resolved logical->mesh mapping for one (config, mesh) pair."""
+    tp: str | None            # mesh axis used for tensor parallelism ('model')
+    fsdp: str | None          # mesh axis for param/optstate sharding ('data')
+    dp: tuple[str, ...]       # batch axes, e.g. ('pod', 'data')
+    tp_size: int
+    fsdp_size: int
+
+    def heads(self, n: int) -> str | None:
+        return self.tp if axis_ok(n, self.tp_size) else None
+
+    def dim(self, size: int) -> str | None:
+        return self.tp if axis_ok(size, self.tp_size) else None
+
+    def fsdp_dim(self, size: int) -> str | None:
+        return self.fsdp if axis_ok(size, self.fsdp_size) else None
+
+
+def make_rules(mesh: jax.sharding.Mesh, *, use_fsdp: bool) -> ShardingRules:
+    names = mesh.axis_names
+    tp = "model" if "model" in names else None
+    fsdp = "data" if (use_fsdp and "data" in names) else None
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    return ShardingRules(
+        tp=tp, fsdp=fsdp, dp=dp,
+        tp_size=sizes.get("model", 1), fsdp_size=sizes.get("data", 1),
+    )

@@ -1,0 +1,167 @@
+"""Encoder-decoder transformer (whisper-family backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``batch["frames"]`` are
+precomputed frame embeddings (B, F, d_model) provided by ``input_specs()``.
+Encoder: non-causal self-attention + GELU MLP.  Decoder: causal self-attention
++ cross-attention + GELU MLP.  RoPE replaces whisper's sinusoidal/learned
+positions (TPU-idiomatic; documented in DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, common
+from repro.models.common import ModelConfig, rms_norm
+
+
+def _init_mlp(cfg: ModelConfig, key: jax.Array, L: int) -> dict:
+    ks = jax.random.split(key, 2)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_up": common.init_dense(ks[0], (L, d, f), cfg.dtype),
+        "w_down": common.init_dense(ks[1], (L, f, d), cfg.dtype),
+    }
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    Le, Ld, d = cfg.encoder_layers, cfg.n_layers, cfg.d_model
+    enc = {
+        **blocks.init_attention(cfg, ks[0], Le),
+        **_init_mlp(cfg, ks[1], Le),
+        "attn_norm": jnp.ones((Le, d), jnp.float32),
+        "mlp_norm": jnp.ones((Le, d), jnp.float32),
+    }
+    h, dh = cfg.n_heads, cfg.head_dim
+    dec = {
+        **blocks.init_attention(cfg, ks[2], Ld),
+        **_init_mlp(cfg, ks[3], Ld),
+        "attn_norm": jnp.ones((Ld, d), jnp.float32),
+        "mlp_norm": jnp.ones((Ld, d), jnp.float32),
+        "cross_norm": jnp.ones((Ld, d), jnp.float32),
+        "cwq": common.init_dense(ks[4], (Ld, d, h * dh), cfg.dtype),
+        "cwk": common.init_dense(ks[5], (Ld, d, h * dh), cfg.dtype),
+        "cwv": common.init_dense(ks[6], (Ld, d, h * dh), cfg.dtype),
+        "cwo": common.init_dense(ks[7], (Ld, h * dh, d), cfg.dtype),
+    }
+    return {
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "embed": common.init_dense(
+            jax.random.fold_in(key, 99), (cfg.vocab, d), cfg.dtype, scale=1.0),
+        "enc_norm": jnp.ones((d,), jnp.float32),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _cross_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                     ck: jax.Array, cv: jax.Array) -> jax.Array:
+    """x: (B, T, D) queries; ck/cv: (B, F, H, Dh) precomputed from encoder."""
+    b, t, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["cwq"]).reshape(b, t, h, dh)
+    scores = jnp.einsum("bthd,bfhd->bhtf", q, ck).astype(jnp.float32)
+    probs = jax.nn.softmax(
+        scores / jnp.sqrt(jnp.asarray(dh, jnp.float32)), -1).astype(x.dtype)
+    out = jnp.einsum("bhtf,bfhd->bthd", probs, cv).reshape(b, t, h * dh)
+    return out @ p["cwo"]
+
+
+def _cross_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    b, f, _ = enc_out.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    ck = (enc_out @ p["cwk"]).reshape(b, f, h, dh)
+    cv = (enc_out @ p["cwv"]).reshape(b, f, h, dh)
+    return ck, cv
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    def block(p, x):
+        x = common.shard_seq(x)
+        x = x + blocks.attention_train(
+            cfg, p, rms_norm(x, p["attn_norm"], cfg.norm_eps), causal=False)
+        x = x + blocks.gelu_mlp(p, rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+        return x
+
+    body = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(
+        lambda c, p: (body(p, c), None),
+        frames.astype(cfg.dtype), params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def block(p, x):
+        x = common.shard_seq(x)
+        x = x + blocks.attention_train(
+            cfg, p, rms_norm(x, p["attn_norm"], cfg.norm_eps))
+        ck, cv = _cross_kv(cfg, p, enc_out)
+        x = x + _cross_attention(
+            cfg, p, rms_norm(x, p["cross_norm"], cfg.norm_eps), ck, cv)
+        x = x + blocks.gelu_mlp(p, rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+        return x
+
+    body = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(lambda c, p: (body(p, c), None), x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T  # whisper ties embeddings
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_cache(cfg: ModelConfig, params: dict, frames: jax.Array,
+               max_len: int) -> dict:
+    """Run the encoder once, precompute per-layer cross K/V, allocate the
+    decoder self-attention cache."""
+    enc_out = encode(cfg, params, frames)
+    ck, cv = jax.vmap(
+        lambda p: _cross_kv(cfg, p, enc_out))(params["dec_blocks"])
+    L, b = cfg.n_layers, frames.shape[0]
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "cur_len": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((L, b, max_len, hkv, dh), cfg.dtype),
+        "v": jnp.zeros((L, b, max_len, hkv, dh), cfg.dtype),
+        "ck": ck, "cv": cv,  # (L, B, F, H, Dh)
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array) -> tuple[jax.Array, dict]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    cur_len = cache["cur_len"]
+
+    def scan_fn(carry, layer):
+        p, k, v, ck, cv = layer
+        x = carry
+        a, k, v = blocks.attention_decode(
+            cfg, p, rms_norm(x, p["attn_norm"], cfg.norm_eps), k, v, cur_len)
+        x = x + a
+        x = x + _cross_attention(
+            cfg, p, rms_norm(x, p["cross_norm"], cfg.norm_eps), ck, cv)
+        x = x + blocks.gelu_mlp(p, rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+        return x, (k, v)
+
+    x, (k, v) = jax.lax.scan(
+        scan_fn, x,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["ck"], cache["cv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return logits, {"cur_len": cur_len + 1, "k": k, "v": v,
+                    "ck": cache["ck"], "cv": cache["cv"]}

@@ -1,0 +1,294 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layer stacks are stored stacked on a leading ``L`` axis and executed with
+``jax.lax.scan`` over rematerialized blocks, so HLO size is depth-independent
+(required for 88-layer x 512-device dry-run compiles).
+
+Public API:
+  init(cfg, key)                          -> params pytree
+  forward(cfg, params, batch)             -> logits (B, T, V)
+  loss_fn(cfg, params, batch)             -> scalar CE (+ MoE aux)
+  init_cache(cfg, batch_size, max_len)    -> decode cache pytree
+  decode_step(cfg, params, cache, tokens) -> (logits (B, 1, V), cache)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, common
+from repro.models.common import ModelConfig, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_windows(cfg: ModelConfig) -> jax.Array:
+    """Per-layer attention window (0 = full).  Hybrid (hymba) schedules a few
+    global layers (first / middle / last) among sliding-window layers."""
+    if cfg.family != "hybrid" or cfg.window <= 0:
+        return jnp.zeros((cfg.n_layers,), jnp.int32)
+    w = jnp.full((cfg.n_layers,), cfg.window, jnp.int32)
+    glob = [0, cfg.n_layers // 2, cfg.n_layers - 1]
+    return w.at[jnp.array(glob)].set(0)
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    L, d, v = cfg.n_layers, cfg.d_model, cfg.vocab
+    blk: dict = {}
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        blk.update(blocks.init_attention(cfg, ks[0], L))
+        blk["attn_norm"] = jnp.ones((L, d), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        blk.update(blocks.init_mamba(cfg, ks[1], L))
+        blk["ssm_norm"] = jnp.ones((L, d), jnp.float32)
+    if cfg.family == "moe":
+        blk.update(blocks.init_moe(cfg, ks[2], L))
+        blk["mlp_norm"] = jnp.ones((L, d), jnp.float32)
+    elif cfg.family in ("dense", "vlm", "hybrid"):
+        blk.update(blocks.init_swiglu(cfg, ks[2], L))
+        blk["mlp_norm"] = jnp.ones((L, d), jnp.float32)
+    params = {
+        "embed": common.init_dense(ks[3], (v, d), cfg.dtype, scale=1.0),
+        "blocks": blk,
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.init_dense(ks[4], (d, v), cfg.dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks (train path)
+# ---------------------------------------------------------------------------
+
+def _block_train(cfg: ModelConfig, p: dict, x: jax.Array,
+                 window: jax.Array) -> jax.Array:
+    """One layer.  p: this layer's leaves (no L dim)."""
+    x = common.shard_seq(x)
+    if cfg.family in ("dense", "moe", "vlm"):
+        x = x + blocks.attention_train(
+            cfg, p, rms_norm(x, p["attn_norm"], cfg.norm_eps))
+    elif cfg.family == "ssm":
+        x = x + blocks.mamba_train(
+            cfg, p, rms_norm(x, p["ssm_norm"], cfg.norm_eps))
+    elif cfg.family == "hybrid":
+        # hymba: attention and SSM heads run in PARALLEL on the same input,
+        # outputs are averaged (normalized fusion).
+        xin = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        a = blocks.attention_train(cfg, p, xin, window=window)
+        s = blocks.mamba_train(cfg, p, xin)
+        x = x + 0.5 * (a + s)
+    if cfg.family == "moe":
+        x = x + blocks.moe_apply(
+            cfg, p, rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+    elif cfg.family in ("dense", "vlm", "hybrid"):
+        x = x + blocks.swiglu(
+            {k: p[k] for k in ("w_gate", "w_up", "w_down")},
+            rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+    return x
+
+
+def _stack(cfg: ModelConfig, blk: dict, x: jax.Array) -> jax.Array:
+    windows = _layer_windows(cfg)
+    body = jax.checkpoint(
+        functools.partial(_block_train, cfg),
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_fn(carry, layer):
+        p, w = layer
+        return body(p, carry, w), None
+
+    x, _ = jax.lax.scan(scan_fn, x, (blk, windows))
+    return common.shard_seq(x)
+
+
+def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """Token embeddings; VLM prepends stub patch embeddings (precomputed by
+    the frontend stub, see input_specs)."""
+    emb = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        emb = jnp.concatenate(
+            [batch["patch_embeds"].astype(emb.dtype), emb], axis=1)
+    return emb
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    x = _embed_inputs(cfg, params, batch)
+    x = _stack(cfg, params["blocks"], x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            *, aux_weight: float = 0.01) -> jax.Array:
+    """Next-token CE in f32 (+ Switch-style load-balance loss for MoE).
+
+    VLM: patch positions carry no labels — loss is computed on the token
+    suffix only.
+    """
+    logits = forward(cfg, params, batch).astype(jnp.float32)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        logits = logits[:, batch["patch_embeds"].shape[1]:]
+    labels = batch["labels"]
+    logits = logits[:, : labels.shape[1]]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.family == "moe":
+        x = _embed_inputs(cfg, params, batch)
+        aux = blocks.moe_aux_loss(
+            cfg, jax.tree.map(lambda a: a[0], params["blocks"]), x)
+        ce = ce + aux_weight * aux
+    return ce
+
+
+# ---------------------------------------------------------------------------
+# decode path (KV / SSM-state caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode cache pytree (leaves have leading L dim for the layer scan)."""
+    L = cfg.n_layers
+    cache: dict = {"cur_len": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        cache["k"] = jnp.zeros((L, batch, max_len, hkv, dh), cfg.dtype)
+        cache["v"] = jnp.zeros((L, batch, max_len, hkv, dh), cfg.dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        di, n = cfg.d_inner, cfg.ssm_state
+        cache["conv_x"] = jnp.zeros(
+            (L, batch, cfg.ssm_conv - 1, di), cfg.dtype)
+        cache["conv_bc"] = jnp.zeros(
+            (L, batch, cfg.ssm_conv - 1, 2 * n), cfg.dtype)
+        cache["ssm"] = jnp.zeros(
+            (L, batch, cfg.ssm_heads, cfg.ssm_headdim, n), jnp.float32)
+    return cache
+
+
+def _block_decode(cfg: ModelConfig, p: dict, x: jax.Array, layer_cache: dict,
+                  cur_len: jax.Array, window: jax.Array
+                  ) -> tuple[jax.Array, dict]:
+    new_cache = dict(layer_cache)
+    if cfg.family in ("dense", "moe", "vlm"):
+        a, new_cache["k"], new_cache["v"] = blocks.attention_decode(
+            cfg, p, rms_norm(x, p["attn_norm"], cfg.norm_eps),
+            layer_cache["k"], layer_cache["v"], cur_len)
+        x = x + a
+    elif cfg.family == "ssm":
+        s, new_cache["conv_x"], new_cache["conv_bc"], new_cache["ssm"] = \
+            blocks.mamba_decode(
+                cfg, p, rms_norm(x, p["ssm_norm"], cfg.norm_eps),
+                layer_cache["conv_x"], layer_cache["conv_bc"],
+                layer_cache["ssm"])
+        x = x + s
+    elif cfg.family == "hybrid":
+        xin = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        a, new_cache["k"], new_cache["v"] = blocks.attention_decode(
+            cfg, p, xin, layer_cache["k"], layer_cache["v"], cur_len,
+            window=window)
+        s, new_cache["conv_x"], new_cache["conv_bc"], new_cache["ssm"] = \
+            blocks.mamba_decode(
+                cfg, p, xin, layer_cache["conv_x"], layer_cache["conv_bc"],
+                layer_cache["ssm"])
+        x = x + 0.5 * (a + s)
+    if cfg.family == "moe":
+        x = x + blocks.moe_apply(
+            cfg, p, rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+    elif cfg.family in ("dense", "vlm", "hybrid"):
+        x = x + blocks.swiglu(
+            {k: p[k] for k in ("w_gate", "w_up", "w_down")},
+            rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+    return x, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            max_len: int) -> tuple[jax.Array, dict]:
+    """Process the whole prompt in one forward pass AND fill the decode
+    cache (per-layer K/V written at [0, T); SSM conv tails + final state).
+
+    Returns (last-position logits (B, V), cache with cur_len = T)."""
+    x = _embed_inputs(cfg, params, batch)
+    b, t, _ = x.shape
+    windows = _layer_windows(cfg)
+
+    def body(carry, layer):
+        p, w = layer
+        x = common.shard_seq(carry)
+        outs = {}
+        if cfg.family in ("dense", "moe", "vlm"):
+            a, k, v = blocks.attention_train(
+                cfg, p, rms_norm(x, p["attn_norm"], cfg.norm_eps),
+                return_kv=True)
+            x = x + a
+            outs["k"], outs["v"] = k, v
+        elif cfg.family == "ssm":
+            s, cx, cbc, st = blocks.mamba_train(
+                cfg, p, rms_norm(x, p["ssm_norm"], cfg.norm_eps),
+                return_state=True)
+            x = x + s
+            outs.update(conv_x=cx, conv_bc=cbc, ssm=st)
+        elif cfg.family == "hybrid":
+            xin = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+            a, k, v = blocks.attention_train(
+                cfg, p, xin, window=w, return_kv=True)
+            s, cx, cbc, st = blocks.mamba_train(cfg, p, xin,
+                                                return_state=True)
+            x = x + 0.5 * (a + s)
+            outs.update(k=k, v=v, conv_x=cx, conv_bc=cbc, ssm=st)
+        if cfg.family == "moe":
+            x = x + blocks.moe_apply(
+                cfg, p, rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+        elif cfg.family in ("dense", "vlm", "hybrid"):
+            x = x + blocks.swiglu(
+                {n: p[n] for n in ("w_gate", "w_up", "w_down")},
+                rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+        return x, outs
+
+    x, per_layer = jax.lax.scan(body, x, (params["blocks"], windows))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x[:, -1] @ head
+
+    cache = init_cache(cfg, b, max_len)
+    if "k" in per_layer:
+        pad = max_len - t
+        cache["k"] = jnp.pad(per_layer["k"].astype(cache["k"].dtype),
+                             ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["v"] = jnp.pad(per_layer["v"].astype(cache["v"].dtype),
+                             ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    for name in ("conv_x", "conv_bc", "ssm"):
+        if name in per_layer:
+            cache[name] = per_layer[name].astype(cache[name].dtype)
+    cache["cur_len"] = jnp.asarray(t, jnp.int32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step.  tokens: (B, 1) -> logits (B, 1, V), updated cache."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    cur_len = cache["cur_len"]
+    windows = _layer_windows(cfg)
+    layer_caches = {k: v for k, v in cache.items() if k != "cur_len"}
+
+    def scan_fn(carry, layer):
+        p, lc, w = layer
+        y, nc = _block_decode(cfg, p, carry, lc, cur_len, w)
+        return y, nc
+
+    x, new_caches = jax.lax.scan(
+        scan_fn, x, (params["blocks"], layer_caches, windows))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    new_cache = dict(new_caches)
+    new_cache["cur_len"] = cur_len + 1
+    return logits, new_cache

@@ -1,0 +1,56 @@
+"""Gradient / delta compression with error feedback.
+
+Composes with the paper's delta-merge: instead of compressing per-step
+gradients (which hurts convergence), we compress the tau-window DELTA before
+the cross-pod merge — the residual is carried into the next window's delta
+(error feedback, Stich et al. style), so nothing is lost, only delayed.
+
+``topk_compress`` keeps the k largest-magnitude entries per leaf (as a dense
+masked tensor — TPU-friendly; the bandwidth win is modeled for the roofline
+as k/n of the leaf bytes, and realized on hardware via sparse DCN transfers).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree like params, f32
+
+
+def init_error_feedback(params) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    """Dense mask keeping the ``frac`` largest-|x| entries."""
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(frac * flat.size))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def topk_compress(delta, ef: ErrorFeedbackState, *, frac: float = 0.01
+                  ) -> tuple[Any, ErrorFeedbackState, jax.Array]:
+    """Returns (compressed_delta, new_ef_state, kept_fraction).
+
+    compressed = topk(delta + residual); residual' = (delta + residual) - compressed.
+    """
+    def leaf(d, r):
+        full = d.astype(jnp.float32) + r
+        mask = _topk_mask(full, frac)
+        kept = full * mask
+        return kept.astype(d.dtype), full - kept
+
+    flat_d, treedef = jax.tree.flatten(delta)
+    flat_r = jax.tree.leaves(ef.residual)
+    outs = [leaf(d, r) for d, r in zip(flat_d, flat_r)]
+    compressed = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    residual = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return compressed, ErrorFeedbackState(residual=residual), jnp.asarray(frac)

@@ -1,0 +1,126 @@
+"""Minimal optax-style optimizers (pure pytree transforms, no deps).
+
+AdamW and SGD(+momentum), with cosine / inverse-sqrt / paper-style
+Robbins-Monro schedules.  State layouts mirror param sharding (the dry-run
+assigns them the same NamedSharding as their parameter leaf), so ZeRO-style
+optimizer-state sharding falls out of the param sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    mu: Any        # first moment, f32, param-shaped
+    nu: Any        # second moment, f32, param-shaped
+    count: jax.Array
+
+
+class SGDState(NamedTuple):
+    momentum: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float, *, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(mu=zeros, nu=_tmap(jnp.copy, zeros),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        lr_t = lr_fn(c)
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                   state.mu, grads)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2)
+                   * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step).astype(p.dtype)
+
+        new_params = _tmap(upd, params, mu, nu)
+        return new_params, AdamState(mu=mu, nu=nu, count=c)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Callable[[jax.Array], jax.Array] | float, *,
+        momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        mom = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+            if momentum else None
+        return SGDState(momentum=mom, count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        lr_t = lr_fn(c)
+        if momentum:
+            mom = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32),
+                        state.momentum, grads)
+            step = mom
+        else:
+            mom, step = None, _tmap(lambda g: g.astype(jnp.float32), grads)
+        new_params = _tmap(
+            lambda p, s: (p.astype(jnp.float32) - lr_t * s).astype(p.dtype),
+            params, step)
+        return new_params, SGDState(momentum=mom, count=c)
+
+    return Optimizer(init=init, update=update)
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(peak: float, *, warmup: int = 100,
+                    total: int = 10000, floor: float = 0.1):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(c < warmup, warm, cos)
+    return fn
+
+
+def rm_schedule(eps0: float = 0.5, decay: float = 1.0):
+    """The paper's Robbins-Monro step sequence eps_t = eps0 / (1 + decay*t)."""
+    def fn(count):
+        return eps0 / (1.0 + decay * count.astype(jnp.float32))
+    return fn
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

@@ -1,0 +1,254 @@
+"""Train / serve step factories, including the paper's merge strategies.
+
+Three granularities:
+
+  * ``make_train_step``  — one synchronous SGD/Adam step; gradients are
+    reduced across all DP axes implicitly by GSPMD (params replicated over
+    DP => XLA inserts the all-reduce).  This is the STANDARD baseline.
+  * ``make_window_step`` — one tau-step WINDOW with the paper's merge
+    protocol across the ``merge_axis`` ('pod' on the multi-pod mesh):
+      - AVERAGE      (paper eq. 3): w_srd = pmean(local w(tau))
+      - DELTA        (paper eq. 8): w_srd = w0 - psum_i (w0 - w_i(tau))
+      - ASYNC_DELTA  (paper eq. 9, TPU-idiomatic): the delta psum of window
+        k-1 is applied at the END of window k, so the collective has no data
+        dependency on window k's compute and XLA's latency-hiding scheduler
+        overlaps it with the tau-step scan (the paper's lock-free reducer
+        becomes a one-window-stale pipelined collective).
+      - ALLREDUCE    : per-step psum over merge_axis inside the window
+        (what the window buys you is measured against this).
+    Implemented with shard_map manual over ``merge_axis`` and auto over the
+    remaining mesh axes, so TP/FSDP sharding inside each pod is untouched.
+  * ``make_serve_step`` / ``make_prefill_step`` — inference.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.models.api import get_api
+from repro.models.common import ModelConfig
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+
+class Merge(enum.Enum):
+    ALLREDUCE = "allreduce"
+    AVERAGE = "average"          # paper eq. (3) — the scheme that does NOT scale
+    DELTA = "delta"              # paper eq. (8)
+    ASYNC_DELTA = "async_delta"  # paper eq. (9), pipelined-collective form
+    DELTA_SPARSE = "delta_sparse"  # eq. (8) + top-k/error-feedback compression
+
+
+# ---------------------------------------------------------------------------
+# plain synchronous step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    *, clip: float = 1.0) -> Callable:
+    api = get_api(cfg)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        loss, grads = jax.value_and_grad(api.loss_fn)(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = optimizer.update(
+            grads, state["opt_state"], state["params"])
+        new_state = {"params": params, "opt_state": opt_state,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, optimizer: Optimizer,
+                     key: jax.Array) -> dict:
+    api = get_api(cfg)
+    params = api.init(key)
+    return {"params": params, "opt_state": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# paper-scheme window step
+# ---------------------------------------------------------------------------
+
+def _tree_sub(a, b):
+    return jax.tree.map(lambda x, y: (x.astype(jnp.float32)
+                                      - y.astype(jnp.float32)), a, b)
+
+
+def _tree_addcast(a, b, like):
+    return jax.tree.map(
+        lambda x, y, l: (x + y).astype(l.dtype), a, b, like)
+
+
+def _sparse_allsum(leaf: jax.Array, residual: jax.Array, frac: float,
+                   axis: str):
+    """Top-k sparse cross-worker sum with error feedback (one leaf).
+
+    Each worker keeps only its k largest-|.| entries of (delta + residual);
+    the values+indices are all-gathered (wire bytes = M*k*8 instead of the
+    dense N*4 — a real, HLO-visible reduction) and scatter-added locally.
+    Returns (summed_dense, new_residual)."""
+    flat = leaf.reshape(-1).astype(jnp.float32)
+    full = flat + residual.reshape(-1)
+    k = max(1, int(frac * full.size))
+    _, idx = jax.lax.top_k(jnp.abs(full), k)
+    vals = full[idx]
+    kept = jnp.zeros_like(full).at[idx].set(vals)
+    new_residual = (full - kept).reshape(leaf.shape)
+    all_vals = jax.lax.all_gather(vals, axis)          # (M, k) — the wire
+    all_idx = jax.lax.all_gather(idx, axis)            # (M, k)
+    summed = jnp.zeros_like(full).at[all_idx.reshape(-1)].add(
+        all_vals.reshape(-1))
+    return summed.reshape(leaf.shape), new_residual
+
+
+def make_window_step(cfg: ModelConfig, optimizer: Optimizer, mesh,
+                     *, tau: int, merge: Merge, merge_axis: str = "pod",
+                     clip: float = 1.0, compress_frac: float = 0.01
+                     ) -> Callable:
+    """Returns window_step(state, batches) -> (state, metrics).
+
+    ``batches``: pytree whose leaves have shape (tau, global_batch, ...).
+    ``state`` additionally carries ``delta_prev`` for ASYNC_DELTA (init with
+    zeros_like(params)).
+    """
+    api = get_api(cfg)
+    axis = merge_axis
+
+    def _pmean_f32(tree):
+        # collectives ride in f32: bf16 all-reduce promotion CHECK-fails in
+        # XLA:CPU, and f32 reductions are what real runs use for grad sync
+        return jax.tree.map(
+            lambda x: jax.lax.pmean(x.astype(jnp.float32), axis)
+            .astype(x.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            tree)
+
+    def local_step(state, batch):
+        loss, grads = jax.value_and_grad(api.loss_fn)(state["params"], batch)
+        if merge is Merge.ALLREDUCE:
+            grads = _pmean_f32(grads)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = optimizer.update(
+            grads, state["opt_state"], state["params"])
+        return ({"params": params, "opt_state": opt_state,
+                 "step": state["step"] + 1}, loss)
+
+    def window_body(state, batches):
+        w0 = state["params"]
+        inner = {k: state[k] for k in ("params", "opt_state", "step")}
+        inner, losses = jax.lax.scan(local_step, inner, batches)
+        wl = inner["params"]
+        out = dict(inner)
+
+        if merge is Merge.AVERAGE:
+            out["params"] = _pmean_f32(wl)
+        elif merge is Merge.DELTA:
+            delta = _tree_sub(w0, wl)                        # Delta^i (eq. 7)
+            total = jax.lax.psum(delta, axis)                # sum_j Delta^j
+            out["params"] = jax.tree.map(
+                lambda p0, d: (p0.astype(jnp.float32) - d).astype(p0.dtype),
+                w0, total)                                   # eq. (8)
+        elif merge is Merge.DELTA_SPARSE:
+            delta = _tree_sub(w0, wl)
+            flat_d, treedef = jax.tree.flatten(delta)
+            flat_r = jax.tree.leaves(state["residual"])
+            outs = [_sparse_allsum(d, r, compress_frac, axis)
+                    for d, r in zip(flat_d, flat_r)]
+            total = jax.tree.unflatten(treedef, [o[0] for o in outs])
+            out["residual"] = jax.tree.unflatten(
+                treedef, [o[1] for o in outs])
+            out["params"] = jax.tree.map(
+                lambda p0, d: (p0.astype(jnp.float32) - d).astype(p0.dtype),
+                w0, total)
+        elif merge is Merge.ASYNC_DELTA:
+            delta = _tree_sub(w0, wl)
+            # merge LAST window's deltas — no data dependency on this
+            # window's scan, so the psum overlaps with compute.
+            stale = jax.lax.psum(state["delta_prev"], axis)
+            out["params"] = jax.tree.map(
+                lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
+                wl, stale)
+            out["delta_prev"] = delta
+        else:  # ALLREDUCE merged per-step already
+            out["params"] = wl
+        if merge in (Merge.AVERAGE, Merge.DELTA):
+            # keep local moments except under the barriered schemes, where
+            # consensus moments keep workers exchangeable (DESIGN.md §3)
+            out["opt_state"] = _pmean_f32(inner["opt_state"])
+        if "delta_prev" in state and "delta_prev" not in out:
+            out["delta_prev"] = state["delta_prev"]
+        if "residual" in state and "residual" not in out:
+            out["residual"] = state["residual"]
+        return out, {"loss": jnp.mean(losses)}
+
+    def window_step(state, batches):
+        # specs: everything unsharded on merge_axis except the batch dim;
+        # the TP/FSDP axes stay under GSPMD (manual axes = {merge_axis} only)
+        def batch_spec(leaf):
+            return P(None, axis, *([None] * (leaf.ndim - 2)))
+
+        in_specs = (
+            jax.tree.map(lambda _: P(), state),
+            jax.tree.map(batch_spec, batches),
+        )
+        out_specs = (jax.tree.map(lambda _: P(), state),
+                     {"loss": P()})
+        fn = shard_map(
+            window_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=frozenset({axis}), check_vma=False)
+        return fn(state, batches)
+
+    return window_step
+
+
+def init_window_state(cfg: ModelConfig, optimizer: Optimizer, key: jax.Array,
+                      merge: Merge) -> dict:
+    state = init_train_state(cfg, optimizer, key)
+    if merge is Merge.ASYNC_DELTA:
+        state["delta_prev"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+    if merge is Merge.DELTA_SPARSE:
+        state["residual"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+    return state
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, *, quantized: bool = False) -> Callable:
+    """Decode step.  With ``quantized=True`` the params argument is the
+    int8 tree from ``models.quantization.quantize_tree`` — weights are
+    dequantized inside the jit (fused into the consuming matmuls), halving
+    the HBM weight traffic that dominates decode (§Perf it.9)."""
+    api = get_api(cfg)
+
+    def serve_step(params: dict, cache: dict, tokens: jax.Array):
+        if quantized:
+            from repro.models import quantization
+            params = quantization.dequantize_tree(params)
+        return api.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: int | None = None
+                      ) -> Callable:
+    """Prefill = one forward over the prompt that ALSO fills the decode
+    cache (per-layer K/V at [0, T); SSM conv tails + final state).
+    Returns (last-position logits, cache ready for decode at cur_len=T)."""
+    api = get_api(cfg)
+
+    def prefill_step(params: dict, batch: dict):
+        t = batch["tokens"].shape[1]
+        return api.prefill(params, batch, max_len or t)
+
+    return prefill_step

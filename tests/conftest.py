@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the default single CPU device (smoke realism); ONLY the
+# dry-run module forces 512 placeholder devices.  A couple of distribution
+# tests want a handful of devices — they get 8.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

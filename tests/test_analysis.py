@@ -1,0 +1,105 @@
+"""Unit tests for the HLO collective accounting and the roofline model."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.distributed import hlo_analysis, roofline
+
+
+SAMPLE_HLO = """\
+HloModule jit_step, is_scheduled=true
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond.1 (p: (s32[], f32[8,4])) -> pred[] {
+  %p = (s32[], f32[8,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (p: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+  %p = (s32[], f32[8,4]{1,0}) parameter(0)
+  %x = f32[8,4]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,4]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add.1
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,4]{1,0}) tuple(%i, %ar)
+}
+
+ENTRY %main (arg: f32[8,4]) -> f32[8,4] {
+  %arg = f32[8,4]{1,0} parameter(0)
+  %init = (s32[], f32[8,4]{1,0}) tuple(s32[] constant(0), %arg)
+  %w = (s32[], f32[8,4]{1,0}) while(%init), condition=%cond.1, body=%body.1
+  %y = f32[8,4]{1,0} get-tuple-element(%w), index=1
+  %ag = bf16[16,4]{1,0} all-gather(%y), channel_id=2, replica_groups=[4,2]<=[8], dimensions={0}
+  ROOT %out = f32[8,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_from_condition_constant():
+    res = hlo_analysis.analyze_collectives(SAMPLE_HLO)
+    assert dict(res["loops"])["body.1"] == 12
+
+
+def test_collective_bytes_weighted_by_trips():
+    res = hlo_analysis.analyze_collectives(SAMPLE_HLO)
+    # in-loop all-reduce: f32[8,4] = 128 B x 12 trips = 1536
+    assert res["bytes_by_kind"]["all-reduce"] == 128 * 12
+    # entry all-gather: bf16[16,4] = 128 B x 1
+    assert res["bytes_by_kind"]["all-gather"] == 128
+    assert res["total_bytes"] == 128 * 12 + 128
+    assert res["in_loop_bytes"] == 128 * 12
+    # tpu adjustment halves the f32 all-reduce bytes
+    assert res["tpu_adjusted_bytes"] == 128 * 12 / 2 + 128
+
+
+def test_shape_bytes_tuple_types():
+    assert hlo_analysis._shape_bytes("(f32[2,3], bf16[4])") == 24 + 8
+    assert hlo_analysis._shape_bytes("pred[7]") == 7
+
+
+# ---------------------------------------------------------------------------
+# roofline model
+# ---------------------------------------------------------------------------
+
+def _cell(name):
+    return next(s for s in registry.SHAPES if s.name == name)
+
+
+def test_model_flops_scale():
+    """6*N*D within a factor ~2 of the analytic total for a dense train cell
+    (the extra is attention quadratic + remat)."""
+    cfg = registry.get_config("granite_8b")
+    fl = roofline.cell_flops(cfg, _cell("train_4k"))
+    assert fl["model_flops"] < fl["total"] < 4 * fl["model_flops"]
+
+
+def test_decode_is_memory_bound_in_model():
+    cfg = registry.get_config("granite_8b")
+    mesh = roofline.mesh_shape(False)
+    terms = roofline.roofline_terms(cfg, _cell("decode_32k"), mesh, 1e6)
+    assert terms["dominant"] == "memory"
+
+
+def test_replication_waste_for_nondivisible_heads():
+    cfg = registry.get_config("starcoder2_7b")  # 36 heads % 16 != 0
+    w = roofline.replication_waste(cfg, roofline.mesh_shape(False))
+    assert w > 2.0
+    cfg2 = registry.get_config("granite_8b")  # 32 heads
+    assert roofline.replication_waste(
+        cfg2, roofline.mesh_shape(False)) == 1.0
+
+
+def test_multipod_halves_per_device_flops():
+    cfg = registry.get_config("granite_8b")
+    c = _cell("train_4k")
+    t1 = roofline.roofline_terms(cfg, c, roofline.mesh_shape(False), 0.0)
+    t2 = roofline.roofline_terms(cfg, c, roofline.mesh_shape(True), 0.0)
+    assert t2["t_compute"] == pytest.approx(t1["t_compute"] / 2, rel=1e-6)

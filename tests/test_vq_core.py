@@ -1,0 +1,86 @@
+"""Unit + property tests for the paper's core: H, VQ iterations, criterion."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vq
+from repro.data import synthetic
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_H_single_touches_only_winner():
+    z = jnp.array([0.0, 0.0])
+    w = jnp.array([[1.0, 0.0], [5.0, 5.0], [-3.0, 0.1]])
+    h = vq.H(z, w)
+    assert h.shape == w.shape
+    # winner is prototype 0 (distance 1)
+    np.testing.assert_allclose(np.asarray(h[0]), [1.0, 0.0])
+    np.testing.assert_allclose(np.asarray(h[1:]), 0.0)
+
+
+def test_H_batch_equals_sum_of_H():
+    z = jax.random.normal(KEY, (32, 6))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (9, 6))
+    hb = vq.H_batch(z, w)
+    hs = sum(vq.H(z[i], w) for i in range(32))
+    np.testing.assert_allclose(np.asarray(hb), np.asarray(hs), atol=1e-4)
+
+
+def test_vq_step_matches_eq1():
+    """w(t+1) differs from w(t) only on the winning prototype, by
+    eps*(w_l - z)."""
+    z = jax.random.normal(KEY, (5,))
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (7, 5))
+    state = vq.VQState(w=w, t=jnp.asarray(3, jnp.int32))
+    new = vq.vq_step(state, z)
+    l = int(vq.nearest(z[None], w)[0])
+    eps = float(vq.default_steps(jnp.asarray(4)))
+    np.testing.assert_allclose(
+        np.asarray(new.w[l]), np.asarray(w[l] - eps * (w[l] - z)), rtol=1e-5)
+    mask = jnp.arange(7) != l
+    np.testing.assert_array_equal(np.asarray(new.w[mask]),
+                                  np.asarray(w[mask]))
+
+
+def test_vq_run_reduces_distortion():
+    data = synthetic.mixture_data(KEY, n=2000, d=4, n_centers=5)
+    w0 = synthetic.kmeanspp_init(jax.random.fold_in(KEY, 3), data, 8)
+    before = float(vq.distortion(data, w0))
+    final = vq.vq_run(w0, data)
+    after = float(vq.distortion(data, final.w))
+    assert after < before
+
+
+def test_window_displacement_identity():
+    """w_final == w0 - delta (eq. 7 bookkeeping)."""
+    data = synthetic.mixture_data(KEY, n=50, d=3)
+    w0 = data[:4]
+    delta, w_final = vq.window_displacement(
+        w0, data, jnp.asarray(0, jnp.int32))
+    np.testing.assert_allclose(np.asarray(w0 - delta), np.asarray(w_final),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 8), st.integers(2, 40))
+def test_distortion_nonnegative_and_zero_on_prototypes(kappa, d, n):
+    key = jax.random.PRNGKey(kappa * 131 + d * 7 + n)
+    w = jax.random.normal(key, (kappa, d))
+    # points exactly on prototypes -> zero distortion
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, kappa)
+    z = w[idx]
+    assert float(vq.distortion(z, w)) == pytest.approx(0.0, abs=1e-5)
+    z2 = jax.random.normal(jax.random.fold_in(key, 2), (n, d))
+    assert float(vq.distortion(z2, w)) >= 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 12))
+def test_steps_monotone_decreasing(a, b):
+    t1 = jnp.asarray(a, jnp.int32)
+    t2 = jnp.asarray(a + b, jnp.int32)
+    assert float(vq.default_steps(t2)) < float(vq.default_steps(t1))
