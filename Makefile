@@ -1,0 +1,24 @@
+# Repro toolchain entry points.
+#
+#   make test         — tier-1 verify (full pytest suite, 8 forced devices)
+#   make bench-smoke  — quick benchmark pass: engine executor suite
+#   make bench-engine — full Sim-vs-Mesh executor benchmark -> BENCH_engine.json
+#   make example-mesh — the 8-device mesh demo against the sim oracles
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
+
+.PHONY: test bench-smoke bench-engine example-mesh
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -m benchmarks.run --suite engine --quick
+
+bench-engine:
+	$(PY) -m benchmarks.run --suite engine
+
+example-mesh:
+	$(PY) examples/mesh_vq.py

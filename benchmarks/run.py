@@ -2,12 +2,20 @@
 benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --suite engine   # executor bench
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+from repro.xla_flags import force_host_devices
+
+# the engine suite runs MeshExecutor up to M=8 workers; harmless for the
+# single-device benches
+force_host_devices(8)
 
 import jax
 import jax.numpy as jnp
@@ -157,6 +165,56 @@ def bench_decode_throughput() -> list[str]:
     return [f"decode_step_smoke,{us:.0f},tokens_per_s={8 / us * 1e6:.0f}"]
 
 
+def bench_engine(*, quick: bool = False,
+                 out_path: str = "BENCH_engine.json") -> list[str]:
+    """SimExecutor vs MeshExecutor wall-clock per processed point, M = 1..8.
+
+    Each executor runs the delta scheme end to end (compile excluded via a
+    warm-up run); "per point" divides by the M*n points the run consumes, so
+    the number is the engine's cost of one unit of the paper's work.  Writes
+    the full trajectory record to ``BENCH_engine.json``."""
+    from repro.data import synthetic
+    from repro.engine import InstantNetwork, get_executor
+
+    n, d, kappa, tau = (400 if quick else 1000), 8, 16, 10
+    key = jax.random.PRNGKey(0)
+    kd, kw = jax.random.split(key)
+    rows, records = [], []
+    for m in (1, 2, 4, 8):
+        data = synthetic.replicate_stream(kd, m, n=n, d=d)
+        eval_data = data[:, :200]
+        w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+        for name in ("sim", "mesh"):
+            ex = get_executor(name, network=InstantNetwork())
+            run = lambda: jax.block_until_ready(  # noqa: E731
+                ex.run("delta", w0, data, eval_data, tau=tau).w_shared)
+            run()  # compile
+            t0 = time.perf_counter()
+            res = ex.run("delta", w0, data, eval_data, tau=tau)
+            jax.block_until_ready(res.w_shared)
+            wall_s = time.perf_counter() - t0
+            points = m * (n // tau) * tau
+            us_per_point = wall_s / points * 1e6
+            rows.append(f"engine_{name}_M{m},{wall_s * 1e6:.0f},"
+                        f"us_per_point={us_per_point:.3f}"
+                        f" final_C={float(res.distortion[-1]):.5f}")
+            records.append({
+                "executor": name, "scheme": "delta", "m": m, "n": n,
+                "d": d, "kappa": kappa, "tau": tau,
+                "wall_s": wall_s, "us_per_point": us_per_point,
+                "wall_ticks": np.asarray(res.wall_ticks).tolist(),
+                "distortion": np.asarray(res.distortion,
+                                         np.float64).tolist(),
+            })
+    with open(out_path, "w") as f:
+        json.dump({"suite": "engine", "devices": len(jax.devices()),
+                   "backend": jax.default_backend(),
+                   "results": records}, f, indent=1)
+    rows.append(f"engine_trajectories,0,wrote {out_path} "
+                f"({len(records)} records)")
+    return rows
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -166,21 +224,36 @@ BENCHES = {
     "merge": bench_merge_strategies,
     "throughput": bench_training_throughput,
     "decode": bench_decode_throughput,
+    "engine": bench_engine,
+}
+
+# named groups runnable as `--suite NAME`
+SUITES = {
+    "engine": ["engine"],
+    "paper": ["fig1", "fig2", "fig3", "fig4"],
+    "lm": ["throughput", "decode"],
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(BENCHES))
+    ap.add_argument("--suite", choices=sorted(SUITES))
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(BENCHES)
+    if args.only:
+        names = [args.only]
+    elif args.suite:
+        names = SUITES[args.suite]
+    else:
+        names = list(BENCHES)
     if args.quick:
         names = [n for n in names if n not in ("fig4",)]
     print("name,us_per_call,derived")
     for name in names:
+        kwargs = {"quick": args.quick} if name == "engine" else {}
         try:
-            for row in BENCHES[name]():
+            for row in BENCHES[name](**kwargs):
                 print(row)
         except Exception as e:  # noqa: BLE001
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")

@@ -1,0 +1,58 @@
+"""The paper's three schemes on a REAL 8-device JAX mesh.
+
+One worker per device via the ``MeshExecutor`` (shard_map + collectives:
+psum for the reducing phase, masked merges for the async staleness model),
+checked live against the single-device ``SimExecutor`` oracles.  On CPU the
+mesh comes from ``--xla_force_host_platform_device_count=8`` — the SPMD
+program is the one a real 8-chip mesh runs.
+
+    PYTHONPATH=src python examples/mesh_vq.py
+"""
+
+from repro.xla_flags import force_host_devices
+
+force_host_devices(8)  # must precede the first jax import
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.data import synthetic  # noqa: E402
+from repro.engine import (GeometricDelayNetwork, InstantNetwork,  # noqa: E402
+                          get_executor)
+
+M, N, D, KAPPA, TAU = 8, 2000, 8, 16, 10
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, M, n=N, d=D)
+    eval_data = data[:, :500]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, D), KAPPA)
+
+    print(f"devices: {len(jax.devices())} x {jax.default_backend()}, "
+          f"M={M} workers (one per device), tau={TAU}\n")
+
+    nets = {"average": InstantNetwork(), "delta": InstantNetwork(),
+            "async_delta": GeometricDelayNetwork(p_delay=0.5)}
+    print(f"{'scheme':>12} {'backend':>8} {'C(final)':>10} {'ticks':>6}  "
+          f"|mesh - sim|")
+    for scheme, net in nets.items():
+        sim = get_executor("sim", network=net)
+        mesh = get_executor("mesh", network=net)
+        r_sim = sim.run(scheme, w0, data, eval_data, tau=TAU, key=ka)
+        r_mesh = mesh.run(scheme, w0, data, eval_data, tau=TAU, key=ka)
+        gap = float(np.max(np.abs(np.asarray(r_sim.distortion)
+                                  - np.asarray(r_mesh.distortion))))
+        for name, r in (("sim", r_sim), ("mesh", r_mesh)):
+            print(f"{scheme:>12} {name:>8} {float(r.distortion[-1]):>10.5f} "
+                  f"{int(r.wall_ticks[-1]):>6}"
+                  + (f"  {gap:.2e}" if name == "mesh" else ""))
+
+    print("\nthe mesh curves replay the paper's simulated results on real "
+          "SPMD collectives;\nasync uses the Section-4 geometric-delay "
+          "cloud model on both backends (same draw).")
+
+
+if __name__ == "__main__":
+    main()

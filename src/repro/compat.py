@@ -1,0 +1,47 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The repo targets the modern ``jax.shard_map`` API (axis_names / check_vma);
+older jax (< 0.5, e.g. the 0.4.37 toolchain baked into the CPU image) only
+ships ``jax.experimental.shard_map.shard_map`` with the (auto / check_rep)
+spelling.  ``repro.compat.shard_map`` presents the modern signature on both:
+
+  * ``axis_names`` — the MANUAL axes.  On old jax the body runs manual over
+    ALL mesh axes instead: partial-manual (``auto=...``) CHECK-fails inside
+    0.4.37's GSPMD partitioner (``hlo_sharding_util.cc:
+    IsManualSubgroup()``) on scanned bodies, so axes the caller wanted auto
+    are simply replicated.  Same numerics, no GSPMD parallelism over those
+    axes — an acceptable trade on the CPU fallback toolchain; new jax gets
+    the real partial-manual lowering.
+  * ``check_vma``  — maps to ``check_rep`` on old jax.
+
+Everything that shard_maps (``training/steps.py``, ``training/pipeline.py``,
+``models/blocks.py``, ``engine/mesh.py``) must import from here, never from
+jax directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f: Callable, mesh: Any, in_specs: Any, out_specs: Any, *,
+              axis_names: frozenset | set | None = None,
+              check_vma: bool = True) -> Callable:
+    """``jax.shard_map`` if present, else the experimental one, one spelling.
+
+    ``axis_names``: the mesh axes the body is manual over (None = all).
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _legacy
+    return _legacy(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma, auto=frozenset())

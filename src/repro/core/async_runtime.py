@@ -49,6 +49,17 @@ class BlobStore:
             self._version += 1
             return self._version
 
+    def apply(self, fn: Callable[[np.ndarray], np.ndarray]) -> int:
+        """Atomic read-modify-write: install ``fn(current)`` as a new version.
+
+        A bare ``get()`` -> ``put()`` pair is NOT atomic — with several
+        writers, updates between the two calls are silently dropped.  The
+        reducer's delta merge must go through here."""
+        with self._lock:
+            self._value = fn(self._value)
+            self._version += 1
+            return self._version
+
 
 @dataclasses.dataclass
 class WorkerStats:
@@ -129,8 +140,9 @@ def run_async_vq(data: np.ndarray, w0: np.ndarray, *, tau: int = 10,
                 _, delta = inbox.get(timeout=0.01)
             except queue.Empty:
                 continue
-            _, w_srd = store.get()
-            store.put(w_srd - delta)  # eq. (9) 4th line, one message at a time
+            # eq. (9) 4th line, one message at a time; atomic so a second
+            # reducer (or any future writer) cannot drop merges
+            store.apply(lambda w_srd: w_srd - delta)
 
     threads = [threading.Thread(target=worker, args=(i,)) for i in range(m)]
     red = threading.Thread(target=reducer)

@@ -64,11 +64,15 @@ def _round_lengths(key: jax.Array, shape, *, tau: int, p_delay: float) -> jax.Ar
 def scheme_async(w0: jax.Array, data: jax.Array, eval_data: jax.Array,
                  key: jax.Array, *, tau: int, p_delay: float = 0.5,
                  eps0: float = 0.5, decay: float = 1.0,
-                 eval_every: int = 10) -> AsyncResult:
+                 eval_every: int = 10,
+                 lengths: jax.Array | None = None) -> AsyncResult:
     """Run eq. (9) for ``n`` wall ticks (n = data.shape[1]).
 
     data: (M, n, d); eval_data: (M, n_eval, d); key: PRNG for round delays.
     ``p_delay`` is the geometric parameter: mean extra delay (1-p)/p ticks.
+    ``lengths``: optional pre-sampled (M, n // tau + 2) per-round durations
+    (a ``repro.engine.network.NetworkModel`` draw); overrides ``p_delay`` so
+    the sim oracle and the mesh engine can replay identical delays.
     """
     m, n, _ = data.shape
     kappa = w0.shape[0]
@@ -76,7 +80,12 @@ def scheme_async(w0: jax.Array, data: jax.Array, eval_data: jax.Array,
     # Pre-sample enough round lengths: each round is >= tau ticks, so at most
     # ceil(n / tau) + 1 rounds per worker.
     max_rounds = n // tau + 2
-    lengths = _round_lengths(key, (m, max_rounds), tau=tau, p_delay=p_delay)
+    if lengths is None:
+        lengths = _round_lengths(key, (m, max_rounds), tau=tau,
+                                 p_delay=p_delay)
+    assert lengths.shape == (m, max_rounds), (
+        f"lengths must be (M, n // tau + 2) = {(m, max_rounds)}, "
+        f"got {lengths.shape}")
     done_at = jnp.cumsum(lengths, axis=1)  # (M, max_rounds) completion ticks
     round_idx0 = jnp.zeros((m,), jnp.int32)
 

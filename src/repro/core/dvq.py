@@ -102,13 +102,20 @@ def make_window_vq_step(*, tau: int, eps0: float = 0.5,
 def run_minibatch_vq(w0: jax.Array, data: jax.Array, *, steps: int,
                      eps0: float = 0.5, decay: float = 1.0):
     """Convenience: scan the minibatch step over a (steps, batch, d) stream.
-    Returns (w_final, distortion_trace)."""
+    Returns (w_final, distortion_trace).  The trace is evaluated on a FIXED
+    eval set (a <=4096-point prefix of the stream, the async_runtime cap) so
+    entries are comparable across steps — per-incoming-batch distortion is
+    noise-dominated whenever the per-step improvement is smaller than the
+    batch-to-batch variance, and a full-stream eval would cost
+    O(steps * total_points) per trace entry."""
     step = make_minibatch_vq_step(eps0=eps0, decay=decay, use_kernel=False)
+    flat = data.reshape(-1, data.shape[-1])
+    eval_set = flat[: min(4096, flat.shape[0])]
 
     def body(carry, z):
         w, t = carry
         w, t = step(w, t, z)
-        return (w, t), vq.distortion(z, w)
+        return (w, t), vq.distortion(eval_set, w)
 
     (w, _), trace = jax.lax.scan(
         body, (w0, jnp.zeros((), jnp.int32)), data)

@@ -1,0 +1,31 @@
+"""Device-mesh execution engine for the paper's parallelization schemes.
+
+One ``Executor`` API (``engine.api``), three interchangeable backends:
+
+  * ``SimExecutor``    — single-device jit/vmap oracles (core.schemes);
+  * ``MeshExecutor``   — one worker per JAX device, shard_map + collectives;
+  * ``ThreadExecutor`` — real threads + blob store (core.async_runtime).
+
+plus the pluggable pieces: ``NetworkModel`` (engine.network — instant /
+fixed-latency / geometric-delay communication cost) and ``MergeStrategy``
+(engine.merge — the reducing phases as pytree collectives, shared with the
+LM window step in training.steps).
+"""
+
+from repro.engine.api import SCHEMES, Executor, get_executor
+from repro.engine.merge import (AsyncDeltaMerge, AverageMerge, DeltaMerge,
+                                MergeStrategy, get_merge)
+from repro.engine.mesh import MeshExecutor, make_worker_mesh
+from repro.engine.network import (FixedLatencyNetwork, GeometricDelayNetwork,
+                                  InstantNetwork, NetworkModel, get_network)
+from repro.engine.sim import SimExecutor
+from repro.engine.threads import ThreadExecutor
+
+__all__ = [
+    "SCHEMES", "Executor", "get_executor",
+    "MergeStrategy", "AverageMerge", "DeltaMerge", "AsyncDeltaMerge",
+    "get_merge",
+    "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",
+    "GeometricDelayNetwork", "get_network",
+    "SimExecutor", "MeshExecutor", "ThreadExecutor", "make_worker_mesh",
+]

@@ -1,0 +1,64 @@
+"""The ``Executor`` protocol — one API over every way to run the schemes.
+
+An executor runs one of the paper's parallelization schemes over M worker
+streams and returns the standard ``SchemeResult`` (final shared prototypes +
+the wall-time distortion curve).  Three interchangeable backends:
+
+  * ``SimExecutor``    (``engine.sim``)     — the single-device jit/vmap
+    simulations in ``core.schemes`` / ``core.async_vq``; the oracles.
+  * ``MeshExecutor``   (``engine.mesh``)    — one worker per JAX device on a
+    real 1-D device mesh via shard_map + collectives; the headline backend.
+  * ``ThreadExecutor`` (``engine.threads``) — the real-thread CloudDALVQ
+    runtime in ``core.async_runtime`` (async_delta only).
+
+Scheme names are shared across backends: 'average', 'delta', 'async_delta'
+('sequential' is scheme_delta at M=1 and needs no executor).
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+
+from repro.core.schemes import SchemeResult
+
+SCHEMES = ("average", "delta", "async_delta")
+
+
+def validate_scheme(scheme: str) -> str:
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; choose from {SCHEMES}")
+    return scheme
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Runs a parallelization scheme over M worker streams."""
+
+    name: str
+
+    def run(self, scheme: str, w0: jax.Array, data: jax.Array,
+            eval_data: jax.Array, *, tau: int, eps0: float = 0.5,
+            decay: float = 1.0, key: jax.Array | None = None) -> SchemeResult:
+        """data: (M, n, d) per-worker streams; eval_data: (M, n_eval, d).
+
+        Returns ``SchemeResult`` with the distortion curve indexed by wall
+        tick (``ThreadExecutor`` indexes by wall seconds — real threads have
+        no tick clock)."""
+        ...
+
+
+def get_executor(name: str, **kwargs) -> Executor:
+    """Factory: 'sim' | 'mesh' | 'thread' (+ backend kwargs)."""
+    if name == "sim":
+        from repro.engine.sim import SimExecutor
+        return SimExecutor(**kwargs)
+    if name == "mesh":
+        from repro.engine.mesh import MeshExecutor
+        return MeshExecutor(**kwargs)
+    if name == "thread":
+        from repro.engine.threads import ThreadExecutor
+        return ThreadExecutor(**kwargs)
+    raise ValueError(
+        f"unknown executor {name!r}; choose from ('sim', 'mesh', 'thread')")

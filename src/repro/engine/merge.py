@@ -1,0 +1,124 @@
+"""Pluggable merge strategies — the paper's reducing phases as pytree ops.
+
+One implementation serves both consumers:
+
+  * ``engine.mesh.MeshExecutor`` calls a strategy on raw (kappa, d) prototype
+    arrays inside its shard_map body (an array is a one-leaf pytree);
+  * ``training.steps.make_window_step`` calls the same strategy on full LM
+    parameter pytrees, so the paper-scheme window step and the VQ engine
+    share one merge implementation.
+
+All collectives ride in f32: XLA:CPU's bf16 all-reduce promotion
+CHECK-fails, and f32 reductions are what real runs use for merge traffic.
+A strategy is ``(merged, new_state) = strategy(w0, w_local, axis, state)``
+where ``w0`` is the window's starting version, ``w_local`` the worker's
+version after tau local steps, and ``axis`` the mesh axis to reduce over.
+Only ``AsyncDeltaMerge`` is stateful (it carries last window's delta).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_sub_f32(a: Pytree, b: Pytree) -> Pytree:
+    """Leafwise ``a - b`` in f32 (the displacement Delta of paper eq. 7)."""
+    return jax.tree.map(
+        lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+def tree_pmean_f32(tree: Pytree, axis: str) -> Pytree:
+    """pmean floating leaves in f32, cast back; non-floating pass through."""
+    return jax.tree.map(
+        lambda x: jax.lax.pmean(x.astype(jnp.float32), axis).astype(x.dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_psum_f32(tree: Pytree, axis: str) -> Pytree:
+    return jax.tree.map(
+        lambda x: jax.lax.psum(x.astype(jnp.float32), axis), tree)
+
+
+def tree_apply_delta(base: Pytree, delta: Pytree) -> Pytree:
+    """``base - delta`` with the subtraction in f32, result in base dtype."""
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype), base, delta)
+
+
+class MergeStrategy:
+    """Base strategy.  ``stateful`` strategies must be fed ``init_state``."""
+
+    name = "base"
+    stateful = False
+
+    def init_state(self, params: Pytree) -> Pytree | None:
+        return None
+
+    def __call__(self, w0: Pytree, w_local: Pytree, axis: str,
+                 state: Pytree | None = None) -> tuple[Pytree, Pytree | None]:
+        raise NotImplementedError
+
+
+class AverageMerge(MergeStrategy):
+    """Paper eq. (3): w_srd = mean_i w^i(tau) — the scheme that does NOT
+    speed convergence up (Section 2's negative result)."""
+
+    name = "average"
+
+    def __call__(self, w0, w_local, axis, state=None):
+        del w0
+        return tree_pmean_f32(w_local, axis), state
+
+
+class DeltaMerge(MergeStrategy):
+    """Paper eq. (8): w_srd = w0 - sum_i Delta^i — displacement merging."""
+
+    name = "delta"
+
+    def __call__(self, w0, w_local, axis, state=None):
+        total = tree_psum_f32(tree_sub_f32(w0, w_local), axis)
+        return tree_apply_delta(w0, total), state
+
+
+class AsyncDeltaMerge(MergeStrategy):
+    """Paper eq. (9) in pipelined-collective form: the reduction of window
+    k-1's deltas is applied at the end of window k, so the collective has no
+    data dependency on window k's compute (one-window-stale merge).
+
+    ``state`` carries last window's local delta (f32, zeros initially)."""
+
+    name = "async_delta"
+    stateful = True
+
+    def init_state(self, params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def __call__(self, w0, w_local, axis, state=None):
+        if state is None:
+            raise ValueError("AsyncDeltaMerge needs its delta_prev state; "
+                             "seed it with init_state(params)")
+        stale = jax.tree.map(lambda d: jax.lax.psum(d, axis), state)
+        merged = tree_apply_delta(w_local, stale)
+        return merged, tree_sub_f32(w0, w_local)
+
+
+_STRATEGIES = {
+    "average": AverageMerge,
+    "delta": DeltaMerge,
+    "async_delta": AsyncDeltaMerge,
+}
+
+
+def get_merge(name: str) -> MergeStrategy:
+    """Factory: 'average' | 'delta' | 'async_delta'."""
+    if name not in _STRATEGIES:
+        raise ValueError(
+            f"unknown merge strategy {name!r}; choose from "
+            f"{sorted(_STRATEGIES)}")
+    return _STRATEGIES[name]()

@@ -1,0 +1,250 @@
+"""``MeshExecutor`` — the paper's schemes on a REAL JAX device mesh.
+
+One worker per device on a 1-D mesh: worker streams are sharded over the
+``workers`` axis with shard_map, each device runs its own sequential-VQ
+inner loop, and the reducing phases are collectives —
+
+  * average  (eq. 3): ``lax.pmean`` of the worker versions;
+  * delta    (eq. 8): ``lax.psum`` of the worker displacements;
+  * async    (eq. 9): a per-tick MASKED psum — only workers whose
+    communication round (drawn from the pluggable ``NetworkModel``)
+    completes at this tick contribute their in-flight delta, which is the
+    barrier-free reducer of the paper's cloud architecture expressed as an
+    SPMD collective.
+
+The per-worker inner loop routes the nearest-prototype search through the
+fused Pallas kernel (``kernels.ops.vq_delta``; interpret mode on CPU), so
+the hot path is the same kernel a TPU run uses, not the reference loop.
+
+On CPU, force a mesh with ``--xla_force_host_platform_device_count=8`` (set
+before jax initializes; see tests/conftest.py) — the SPMD program is then
+bit-for-bit the one a real 8-chip mesh runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.core import vq
+from repro.core.schemes import SchemeResult
+from repro.engine import api, merge as merge_lib
+from repro.engine.network import GeometricDelayNetwork, NetworkModel
+from repro.kernels import ops
+
+
+def make_worker_mesh(m: int, axis: str = "workers") -> Mesh:
+    """1-D mesh over the first ``m`` available devices."""
+    if not axis:
+        raise ValueError("mesh axis name must be a non-empty string")
+    devices = jax.devices()
+    if m < 1 or m > len(devices):
+        raise ValueError(
+            f"need 1 <= M <= {len(devices)} devices for a worker mesh, "
+            f"got M={m} (hint: --xla_force_host_platform_device_count)")
+    return Mesh(np.asarray(devices[:m]), (axis,))
+
+
+def _validate_axis_names(mesh: Mesh, axis: str) -> None:
+    if any(not name for name in mesh.axis_names):
+        raise ValueError(
+            f"mesh axis names must be non-empty, got {mesh.axis_names}")
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"worker axis {axis!r} not in mesh axes {mesh.axis_names}")
+
+
+def _validate_mesh(mesh: Mesh, axis: str, m: int) -> None:
+    _validate_axis_names(mesh, axis)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if sizes[axis] != m:
+        raise ValueError(
+            f"data has M={m} worker streams but mesh axis {axis!r} has "
+            f"{sizes[axis]} devices — one worker per device is required")
+
+
+def _local_window(w0: jax.Array, zwin: jax.Array, t0: jax.Array, *,
+                  eps0: float, decay: float, use_pallas: bool
+                  ) -> tuple[jax.Array, jax.Array]:
+    """tau sequential VQ steps (eq. 1) on one device; returns (delta, w)."""
+
+    def body(carry, z):
+        w, t = carry
+        eps = vq.default_steps(t + 1, eps0=eps0, decay=decay)
+        if use_pallas:
+            # fused distance+argmin+scatter kernel; batch of one point, so
+            # counts/zsum reduce exactly to eq. (4)'s H(z, w)
+            counts, zsum = ops.vq_delta(z[None, :], w)
+            h = counts[:, None] * w - zsum
+        else:
+            h = vq.H(z, w)
+        return (w - eps * h, t + 1), None
+
+    (w, _), _ = jax.lax.scan(body, (w0, t0), zwin)
+    return w0 - w, w
+
+
+class MeshExecutor:
+    """One worker per mesh device, merged with collectives (the headline)."""
+
+    name = "mesh"
+
+    def __init__(self, mesh: Mesh | None = None, axis: str = "workers",
+                 network: NetworkModel | None = None, *,
+                 use_pallas: bool = True, eval_every: int = 10):
+        if not axis:
+            raise ValueError("worker axis name must be a non-empty string")
+        if mesh is not None:
+            _validate_axis_names(mesh, axis)
+        self.mesh = mesh
+        self.axis = axis
+        self.network = network or GeometricDelayNetwork()
+        self.use_pallas = use_pallas
+        self.eval_every = eval_every
+        # compiled-program cache: rebuilding the shard_map closure on every
+        # run() would recompile each time; key = everything trace-affecting
+        self._compiled: dict[tuple, object] = {}
+
+    # -- public API ---------------------------------------------------------
+
+    def run(self, scheme: str, w0: jax.Array, data: jax.Array,
+            eval_data: jax.Array, *, tau: int, eps0: float = 0.5,
+            decay: float = 1.0, key: jax.Array | None = None) -> SchemeResult:
+        api.validate_scheme(scheme)
+        if data.ndim != 3:
+            raise ValueError(f"data must be (M, n, d), got {data.shape}")
+        if eval_data.ndim != 3 or eval_data.shape[0] != data.shape[0]:
+            raise ValueError(
+                f"eval_data must be (M, n_eval, d) with the same M as data; "
+                f"got {eval_data.shape} vs M={data.shape[0]}")
+        m = data.shape[0]
+        mesh = self.mesh if self.mesh is not None else make_worker_mesh(
+            m, self.axis)
+        _validate_mesh(mesh, self.axis, m)
+        if scheme == "async_delta":
+            return self._run_async(mesh, w0, data, eval_data, tau=tau,
+                                   eps0=eps0, decay=decay, key=key)
+        return self._run_sync(mesh, scheme, w0, data, eval_data, tau=tau,
+                              eps0=eps0, decay=decay)
+
+    # -- synchronous schemes (eqs. 3 and 8) ---------------------------------
+
+    def _run_sync(self, mesh: Mesh, scheme: str, w0, data, eval_data, *,
+                  tau: int, eps0: float, decay: float) -> SchemeResult:
+        axis = self.axis
+        n = data.shape[1]
+        n_windows = n // tau
+        strategy = merge_lib.get_merge(scheme)
+        use_pallas = self.use_pallas
+
+        def body(w0_in, data_l, eval_l):
+            stream = data_l[0]                       # (n, d) local shard
+            windows = stream[: n_windows * tau].reshape(n_windows, tau, -1)
+            ev = eval_l[0]                           # (n_eval, d)
+
+            def window(carry, zwin):
+                w_srd, t0 = carry
+                _, w_fin = _local_window(w_srd, zwin, t0, eps0=eps0,
+                                         decay=decay, use_pallas=use_pallas)
+                w_srd, _ = strategy(w_srd, w_fin, axis)
+                t0 = t0 + tau
+                c = jax.lax.pmean(vq.distortion(ev, w_srd), axis)
+                return (w_srd, t0), c
+
+            (w_srd, _), curve = jax.lax.scan(
+                window, (w0_in, jnp.asarray(0, jnp.int32)),
+                windows)
+            return w_srd, curve
+
+        cache_key = ("sync", scheme, mesh, w0.shape, data.shape,
+                     eval_data.shape, tau, eps0, decay, use_pallas)
+        if cache_key not in self._compiled:
+            self._compiled[cache_key] = jax.jit(compat.shard_map(
+                body, mesh, in_specs=(P(), P(axis), P(axis)),
+                out_specs=(P(), P()),
+                axis_names=frozenset({axis}), check_vma=False))
+        w_final, curve = self._compiled[cache_key](w0, data, eval_data)
+        wt = self.network.window_ticks(tau)
+        ticks = jnp.arange(1, n_windows + 1, dtype=jnp.int32) * wt
+        return SchemeResult(w_shared=w_final, wall_ticks=ticks,
+                            distortion=curve)
+
+    # -- asynchronous scheme (eq. 9) ----------------------------------------
+
+    def _run_async(self, mesh: Mesh, w0, data, eval_data, *, tau: int,
+                   eps0: float, decay: float,
+                   key: jax.Array | None) -> SchemeResult:
+        axis = self.axis
+        m, n, _ = data.shape
+        key = jax.random.PRNGKey(0) if key is None else key
+        max_rounds = n // tau + 2
+        lengths = self.network.round_lengths(key, m, max_rounds, tau)
+        done_at = jnp.cumsum(lengths, axis=1)        # (M, max_rounds)
+        eval_every = self.eval_every
+        eval_ticks = np.arange(eval_every - 1, n, eval_every)
+        use_pallas = self.use_pallas
+
+        def body(w0_in, data_l, eval_l, done_at_l):
+            stream = data_l[0]                       # (n, d)
+            ev = eval_l[0]
+            my_done_at = done_at_l[0]                # (max_rounds,)
+
+            def tick(carry, z):
+                w, w_srd, snap, dcur, dinf, nd, t, ridx = carry
+                eps = vq.default_steps(t + 1, eps0=eps0, decay=decay)
+                # local VQ step (1st line of eq. 9), Pallas hot path
+                if use_pallas:
+                    counts, zsum = ops.vq_delta(z[None, :], w)
+                    h = counts[:, None] * w - zsum
+                else:
+                    h = vq.H(z, w)
+                step = eps * h
+                w_tmp = w - step
+                dcur = dcur + step
+
+                done = nd == t                       # this worker completes?
+                donef = done.astype(w.dtype)
+                # masked merge: ONLY completing workers' in-flight deltas
+                # land on the reducer (4th line of eq. 9)
+                w_srd = w_srd - jax.lax.psum(donef * dinf, axis)
+                # completed: adopt downloaded snapshot + replay local delta
+                # (3rd line); others keep the plain step (2nd line)
+                w = jnp.where(done, snap - dcur, w_tmp)
+                snap = jnp.where(done, w_srd, snap)
+                dinf = jnp.where(done, dcur, dinf)
+                dcur = jnp.where(done, jnp.zeros_like(dcur), dcur)
+                ridx = ridx + done.astype(jnp.int32)
+                nd = jnp.where(
+                    done,
+                    jnp.take(my_done_at, jnp.minimum(ridx, max_rounds - 1)),
+                    nd)
+                return (w, w_srd, snap, dcur, dinf, nd, t + 1, ridx), w_srd
+
+            zeros = jnp.zeros_like(w0_in)
+            init = (w0_in, w0_in, w0_in, zeros, zeros, my_done_at[0],
+                    jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+            carry, traj = jax.lax.scan(tick, init, stream)
+            w_srd_final = carry[1]
+            sel = traj[eval_ticks]                   # (n_evals, kappa, d)
+            c_local = jax.vmap(lambda w_: vq.distortion(ev, w_))(sel)
+            curve = jax.lax.pmean(c_local, axis)
+            return w_srd_final, curve
+
+        cache_key = ("async", mesh, w0.shape, data.shape, eval_data.shape,
+                     tau, eps0, decay, eval_every, use_pallas)
+        if cache_key not in self._compiled:
+            self._compiled[cache_key] = jax.jit(compat.shard_map(
+                body, mesh, in_specs=(P(), P(axis), P(axis), P(axis)),
+                out_specs=(P(), P()),
+                axis_names=frozenset({axis}), check_vma=False))
+        w_final, curve = self._compiled[cache_key](w0, data, eval_data,
+                                                   done_at)
+        return SchemeResult(
+            w_shared=w_final,
+            wall_ticks=jnp.asarray(eval_ticks + 1, jnp.int32),
+            distortion=curve)

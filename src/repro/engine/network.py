@@ -1,0 +1,115 @@
+"""Pluggable communication-cost models — paper Section 4's cloud model.
+
+A ``NetworkModel`` answers two questions the executors ask:
+
+  * ``round_lengths(key, m, max_rounds, tau)`` — for the ASYNC scheme: how
+    many wall ticks does each of a worker's back-to-back upload/download
+    rounds take?  A round is always >= ``tau`` (the paper's "as soon as its
+    previous uploads and downloads are completed" protocol processes tau
+    points per round); the model adds the random communication cost on top.
+  * ``window_ticks(tau)`` — for the SYNC schemes: how many wall ticks one
+    barriered tau-window costs (compute + the blocking merge round-trip).
+
+Three concrete models:
+
+  * ``InstantNetwork``        — communications are free (the simulated
+    architecture of paper Sections 2-3: a window costs exactly tau ticks).
+  * ``FixedLatencyNetwork``   — every round pays a constant extra latency
+    (a LAN / same-rack datacenter).
+  * ``GeometricDelayNetwork`` — extra ticks ~ Geometric(p_delay), the
+    paper Section 4 cloud model (mean extra delay (1-p)/p ticks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+class NetworkModel:
+    """Base communication-cost model; subclasses override both hooks."""
+
+    name = "base"
+
+    def round_lengths(self, key: jax.Array, m: int, max_rounds: int,
+                      tau: int) -> jax.Array:
+        """(m, max_rounds) int32 per-round durations in wall ticks (>= tau)."""
+        raise NotImplementedError
+
+    def window_ticks(self, tau: int) -> int:
+        """Wall ticks a synchronous tau-window costs under this network."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class InstantNetwork(NetworkModel):
+    name = "instant"
+
+    def round_lengths(self, key, m, max_rounds, tau):
+        del key
+        return jnp.full((m, max_rounds), tau, jnp.int32)
+
+    def window_ticks(self, tau):
+        return tau
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedLatencyNetwork(NetworkModel):
+    """Every communication round pays ``latency_ticks`` extra wall ticks."""
+
+    latency_ticks: int = 1
+    name = "fixed"
+
+    def __post_init__(self):
+        if self.latency_ticks < 0:
+            raise ValueError(f"latency_ticks must be >= 0, "
+                             f"got {self.latency_ticks}")
+
+    def round_lengths(self, key, m, max_rounds, tau):
+        del key
+        return jnp.full((m, max_rounds), tau + self.latency_ticks, jnp.int32)
+
+    def window_ticks(self, tau):
+        return tau + self.latency_ticks
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometricDelayNetwork(NetworkModel):
+    """Paper Section 4: extra round ticks ~ Geometric(p_delay)."""
+
+    p_delay: float = 0.5
+    name = "geometric"
+
+    def __post_init__(self):
+        if not 0.0 < self.p_delay <= 1.0:
+            raise ValueError(f"p_delay must be in (0, 1], got {self.p_delay}")
+
+    def round_lengths(self, key, m, max_rounds, tau):
+        # identical sampler to async_vq._round_lengths so that the sim
+        # oracle and the mesh engine draw THE SAME delays from one key
+        from repro.core.async_vq import _round_lengths
+        return _round_lengths(key, (m, max_rounds), tau=tau,
+                              p_delay=self.p_delay)
+
+    def window_ticks(self, tau):
+        # a barriered window waits for the slowest worker; charging the MEAN
+        # extra delay keeps the sync/async comparison conservative
+        mean_extra = (1.0 - self.p_delay) / self.p_delay
+        return tau + int(round(mean_extra))
+
+
+_NETWORKS = {
+    "instant": InstantNetwork,
+    "fixed": FixedLatencyNetwork,
+    "geometric": GeometricDelayNetwork,
+}
+
+
+def get_network(name: str, **kwargs) -> NetworkModel:
+    """Factory: 'instant' | 'fixed' | 'geometric' (+ model kwargs)."""
+    if name not in _NETWORKS:
+        raise ValueError(
+            f"unknown network model {name!r}; choose from {sorted(_NETWORKS)}")
+    return _NETWORKS[name](**kwargs)

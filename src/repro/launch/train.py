@@ -1,7 +1,16 @@
-"""End-to-end training driver.
+"""End-to-end training driver — LM training and the paper's VQ schemes.
+
+LM mode (default):
 
     PYTHONPATH=src python -m repro.launch.train --arch granite_8b --smoke \
-        --steps 200 --ckpt-dir /tmp/ckpt [--resume] [--merge delta --tau 10]
+        --steps 200 --ckpt-dir /tmp/ckpt [--resume]
+
+VQ mode — the paper's workload through the ``repro.engine`` Executor API,
+on any of the three backends:
+
+    PYTHONPATH=src python -m repro.launch.train --mode vq \
+        --executor mesh --scheme delta --workers 8 --tau 10 \
+        [--network geometric --p-delay 0.5]
 
 Runs on whatever devices exist (CPU smoke through full meshes): builds the
 mesh, shards state via the same rules the dry-run proves out, streams the
@@ -29,8 +38,65 @@ from repro.optim import optimizers
 from repro.training import steps as steps_lib
 
 
+def run_vq(args) -> int:
+    """The paper's schemes behind the engine's Executor API."""
+    from repro.data import synthetic
+    from repro.engine import get_executor, get_network
+
+    key = jax.random.PRNGKey(args.seed)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, args.workers, n=args.points,
+                                      d=args.dim)
+    eval_data = data[:, : min(1000, args.points)]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, args.dim), args.kappa)
+
+    net_kw = {}
+    if args.network == "fixed":
+        net_kw["latency_ticks"] = args.latency
+    elif args.network == "geometric":
+        net_kw["p_delay"] = args.p_delay
+    network = get_network(args.network, **net_kw)
+    if args.executor == "thread":
+        # real threads have no tick clock: tick-based NetworkModels don't
+        # apply, and silently dropping them would mislabel the run
+        if args.network != "instant":
+            print(f"error: --network {args.network} is tick-based; the "
+                  f"thread backend models communication in seconds — use "
+                  f"--comm-delay-s instead")
+            return 2
+        ex_kw = {"duration_s": args.duration_s,
+                 "comm_delay_s": args.comm_delay_s}
+    else:
+        ex_kw = {"network": network}
+    executor = get_executor(args.executor, **ex_kw)
+
+    print(f"executor={executor.name} scheme={args.scheme} "
+          f"M={args.workers} tau={args.tau} network={args.network} "
+          f"devices={len(jax.devices())}")
+    t0 = time.time()
+    try:
+        res = executor.run(args.scheme, w0, data, eval_data, tau=args.tau,
+                           eps0=args.eps0, key=ka)
+    except ValueError as e:  # bad scheme/mesh/shape combination
+        print(f"error: {e}")
+        return 2
+    jax.block_until_ready(res.w_shared)
+    wall = time.time() - t0
+    curve = np.asarray(res.distortion)
+    ticks = np.asarray(res.wall_ticks)
+    idx = np.unique(np.linspace(0, len(curve) - 1, 10).astype(int))
+    unit = "s" if executor.name == "thread" else "ticks"
+    for i in idx:
+        print(f"  {unit} {float(ticks[i]):>8.1f}  C = {curve[i]:.5f}")
+    pts = args.workers * args.points
+    print(f"done: C(final)={curve[-1]:.5f} in {wall:.2f}s wall "
+          f"({wall / pts * 1e6:.2f} us/point over {pts} points)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "vq"), default="lm")
     ap.add_argument("--arch", default="granite_8b",
                     choices=registry.ARCH_IDS)
     ap.add_argument("--smoke", action="store_true",
@@ -44,7 +110,33 @@ def main(argv=None) -> int:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--data-axis", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
+    # VQ-mode options (--mode vq): engine backend + paper hyperparameters
+    ap.add_argument("--executor", choices=("sim", "mesh", "thread"),
+                    default="sim")
+    ap.add_argument("--scheme",
+                    choices=("average", "delta", "async_delta"),
+                    default="delta")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--points", type=int, default=2000,
+                    help="data points per worker")
+    ap.add_argument("--dim", type=int, default=8)
+    ap.add_argument("--kappa", type=int, default=16)
+    ap.add_argument("--tau", type=int, default=10)
+    ap.add_argument("--eps0", type=float, default=0.5)
+    ap.add_argument("--network",
+                    choices=("instant", "fixed", "geometric"),
+                    default="instant")
+    ap.add_argument("--latency", type=int, default=1)
+    ap.add_argument("--p-delay", type=float, default=0.5)
+    ap.add_argument("--duration-s", type=float, default=2.0,
+                    help="thread backend: wall seconds to run")
+    ap.add_argument("--comm-delay-s", type=float, default=0.0,
+                    help="thread backend: per-round comm latency (seconds)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.mode == "vq":
+        return run_vq(args)
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))

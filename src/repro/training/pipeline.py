@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models import blocks, common
 from repro.models.common import ModelConfig, rms_norm
 
@@ -153,8 +154,8 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh: Mesh, *, n_micro: int
         if "lm_head" in params:
             pspec["lm_head"] = P()
             params["lm_head"] = params["lm_head"].astype(jnp.float32)
-        fn = jax.shard_map(
-            body, mesh=mesh,
+        fn = compat.shard_map(
+            body, mesh,
             in_specs=(pspec, {"tokens": P(), "labels": P()}),
             out_specs=P(),
             axis_names=frozenset({"pod"}), check_vma=False)

@@ -30,8 +30,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
+from repro.engine import merge as merge_lib
 from repro.models.api import get_api
 from repro.models.common import ModelConfig
 from repro.optim.optimizers import Optimizer, clip_by_global_norm
@@ -77,9 +78,9 @@ def init_train_state(cfg: ModelConfig, optimizer: Optimizer,
 # paper-scheme window step
 # ---------------------------------------------------------------------------
 
-def _tree_sub(a, b):
-    return jax.tree.map(lambda x, y: (x.astype(jnp.float32)
-                                      - y.astype(jnp.float32)), a, b)
+# displacement / merge tree algebra lives in repro.engine.merge so the LM
+# window step and the VQ mesh engine share ONE implementation
+_tree_sub = merge_lib.tree_sub_f32
 
 
 def _tree_addcast(a, b, like):
@@ -125,10 +126,7 @@ def make_window_step(cfg: ModelConfig, optimizer: Optimizer, mesh,
     def _pmean_f32(tree):
         # collectives ride in f32: bf16 all-reduce promotion CHECK-fails in
         # XLA:CPU, and f32 reductions are what real runs use for grad sync
-        return jax.tree.map(
-            lambda x: jax.lax.pmean(x.astype(jnp.float32), axis)
-            .astype(x.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
-            tree)
+        return merge_lib.tree_pmean_f32(tree, axis)
 
     def local_step(state, batch):
         loss, grads = jax.value_and_grad(api.loss_fn)(state["params"], batch)
@@ -148,13 +146,9 @@ def make_window_step(cfg: ModelConfig, optimizer: Optimizer, mesh,
         out = dict(inner)
 
         if merge is Merge.AVERAGE:
-            out["params"] = _pmean_f32(wl)
+            out["params"], _ = merge_lib.AverageMerge()(w0, wl, axis)
         elif merge is Merge.DELTA:
-            delta = _tree_sub(w0, wl)                        # Delta^i (eq. 7)
-            total = jax.lax.psum(delta, axis)                # sum_j Delta^j
-            out["params"] = jax.tree.map(
-                lambda p0, d: (p0.astype(jnp.float32) - d).astype(p0.dtype),
-                w0, total)                                   # eq. (8)
+            out["params"], _ = merge_lib.DeltaMerge()(w0, wl, axis)  # eq. (8)
         elif merge is Merge.DELTA_SPARSE:
             delta = _tree_sub(w0, wl)
             flat_d, treedef = jax.tree.flatten(delta)
@@ -168,14 +162,10 @@ def make_window_step(cfg: ModelConfig, optimizer: Optimizer, mesh,
                 lambda p0, d: (p0.astype(jnp.float32) - d).astype(p0.dtype),
                 w0, total)
         elif merge is Merge.ASYNC_DELTA:
-            delta = _tree_sub(w0, wl)
             # merge LAST window's deltas — no data dependency on this
             # window's scan, so the psum overlaps with compute.
-            stale = jax.lax.psum(state["delta_prev"], axis)
-            out["params"] = jax.tree.map(
-                lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
-                wl, stale)
-            out["delta_prev"] = delta
+            out["params"], out["delta_prev"] = merge_lib.AsyncDeltaMerge()(
+                w0, wl, axis, state["delta_prev"])
         else:  # ALLREDUCE merged per-step already
             out["params"] = wl
         if merge in (Merge.AVERAGE, Merge.DELTA):
@@ -212,8 +202,8 @@ def init_window_state(cfg: ModelConfig, optimizer: Optimizer, key: jax.Array,
                       merge: Merge) -> dict:
     state = init_train_state(cfg, optimizer, key)
     if merge is Merge.ASYNC_DELTA:
-        state["delta_prev"] = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+        state["delta_prev"] = merge_lib.AsyncDeltaMerge().init_state(
+            state["params"])
     if merge is Merge.DELTA_SPARSE:
         state["residual"] = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])

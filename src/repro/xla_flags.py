@@ -1,0 +1,24 @@
+"""Pre-jax process bootstrap helpers.
+
+MUST be importable (and called) before jax first initializes — so this
+module imports no jax.  Per https://github.com/google/jax/issues/17188 the
+forced-host-device flag cannot be changed after backend init; every entry
+point that wants an emulated CPU mesh calls ``force_host_devices()`` at
+module top, before its ``import jax`` (the keras distribution_lib_test
+idiom, centralized).
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def force_host_devices(n: int = 8) -> None:
+    """Ask XLA:CPU for ``n`` host devices unless the operator already chose.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``,
+    preserving any other flags; a pre-existing device-count flag wins."""
+    xla_flags = os.getenv("XLA_FLAGS") or ""
+    if "xla_force_host_platform_device_count" not in xla_flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{xla_flags} --xla_force_host_platform_device_count={n}".strip())

@@ -1,0 +1,93 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The baked CPU image ships without hypothesis; rather than losing the
+property tests (or pip-installing into the image), this shim replays each
+``@given`` test over a fixed number of seeded-RNG samples from the declared
+strategies.  Coverage is a deterministic subset of what hypothesis would
+explore — no shrinking, no example database — but every invariant still
+runs.  Test modules import it as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[np.random.Generator], object],
+                 boundaries: Sequence = ()):
+        self._sample = sample
+        self.boundaries = list(boundaries)  # tried before random draws
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+class st:  # noqa: N801 — mimics `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            boundaries=[min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                         boundaries=[min_value, max_value])
+
+    @staticmethod
+    def sampled_from(elements: Sequence) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.integers(len(elements))],
+                         boundaries=elements[:1])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)),
+                         boundaries=[False, True])
+
+
+def settings(*, max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+    """Records max_examples on the (already given-wrapped) test."""
+
+    def deco(f):
+        f._max_examples = max_examples
+        return f
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Replays the test over seeded samples; boundary samples come first.
+
+    The first examples pin every strategy to its k-th boundary value (all
+    minima, then all maxima — the off-by-one habitats); remaining examples
+    are random draws from a fixed seed, so failures reproduce identically
+    run to run.
+    """
+
+    def deco(f):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(12345)
+            n_boundary = min(n, max(len(s.boundaries) for s in strategies))
+            for k in range(n_boundary):
+                f(*[s.boundaries[min(k, len(s.boundaries) - 1)]
+                    if s.boundaries else s.sample(rng) for s in strategies])
+            for _ in range(n - n_boundary):
+                f(*[s.sample(rng) for s in strategies])
+
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+    return deco

@@ -53,3 +53,26 @@ def test_blob_store_versioning():
     assert v1 == v0 + 1
     v, val = store.get()
     assert v == v1 and float(val[0, 0]) == 1.0
+
+
+def test_blob_store_apply_is_atomic_under_contention():
+    """The reducer's merge is a read-modify-write: a bare get()->put() pair
+    drops concurrent updates.  ``apply`` must lose NONE of them."""
+    import threading
+
+    store = async_runtime.BlobStore(np.zeros((4,), np.float32))
+    writers, per_writer = 8, 200
+
+    def hammer():
+        for _ in range(per_writer):
+            store.apply(lambda w: w + 1.0)
+
+    threads = [threading.Thread(target=hammer) for _ in range(writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    version, value = store.get()
+    assert version == writers * per_writer
+    np.testing.assert_array_equal(
+        value, np.full((4,), writers * per_writer, np.float32))

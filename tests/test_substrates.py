@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image ships without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint.checkpointing import Checkpointer
 from repro.configs import registry
