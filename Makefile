@@ -1,18 +1,32 @@
 # Repro toolchain entry points.
 #
-#   make test         — tier-1 verify (full pytest suite, 8 forced devices)
-#   make bench-smoke  — quick benchmark pass: engine executor suite
-#   make bench-engine — full Sim-vs-Mesh executor benchmark -> BENCH_engine.json
-#   make example-mesh — the 8-device mesh demo against the sim oracles
+#   make test          — tier-1 verify (full pytest suite, 8 forced devices)
+#   make bench-smoke   — quick benchmark pass: engine executor suite
+#   make bench-engine  — full Sim-vs-Mesh executor benchmark -> BENCH_engine.json
+#   make bench-elastic — elastic resize-event cost benchmark -> BENCH_elastic.json
+#   make ci-local      — mirror the full CI matrix locally (lint, tier-1 under
+#                        1 AND 8 forced devices, fresh engine bench + the
+#                        regression gate) so CI failures reproduce without pushing
+#   make example-mesh  — the 8-device mesh demo against the sim oracles
+#   make example-elastic — the 8->4->8 elastic resharding demo
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
 
-.PHONY: test bench-smoke bench-engine example-mesh
+.PHONY: test lint bench-smoke bench-engine bench-elastic ci-local \
+        example-mesh example-elastic
 
 test:
 	$(PY) -m pytest -x -q
+
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks examples; \
+	else \
+		echo "ruff not installed; skipping (CI runs it)"; \
+	fi
+	$(PY) -m compileall -q src tests benchmarks examples
 
 bench-smoke:
 	$(PY) -m benchmarks.run --suite engine --quick
@@ -20,5 +34,19 @@ bench-smoke:
 bench-engine:
 	$(PY) -m benchmarks.run --suite engine
 
+bench-elastic:
+	$(PY) -m benchmarks.run --suite elastic
+
+ci-local: lint
+	XLA_FLAGS=--xla_force_host_platform_device_count=1 $(PY) -m pytest -q
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest -q
+	$(PY) -m benchmarks.run --suite engine --quick --out BENCH_engine.fresh.json
+	$(PY) -m benchmarks.check_regression \
+		--baseline BENCH_engine.json --fresh BENCH_engine.fresh.json
+	$(PY) -m benchmarks.run --suite elastic --quick --out BENCH_elastic.fresh.json
+
 example-mesh:
 	$(PY) examples/mesh_vq.py
+
+example-elastic:
+	$(PY) examples/elastic_vq.py

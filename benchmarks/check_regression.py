@@ -1,0 +1,139 @@
+"""CI benchmark regression gate for the engine suite.
+
+Diffs a fresh ``benchmarks.run --suite engine --quick`` output against the
+committed ``BENCH_engine.json`` baseline and FAILS (exit 1) when:
+
+  * the mesh-vs-sim wall-clock ratio regresses by more than
+    ``--max-ratio-regression`` on every M leg (default 1.25, i.e. >25%
+    slower relative to the sim executor on the same machine — absolute wall
+    times are not comparable across machines, the ratio is); or
+  * any distortion curve diverges from the baseline beyond ``--curve-rtol``
+    (the runs are seeded, so the curves are a numerical fingerprint of the
+    engine — a drift means the schemes no longer compute what they did).
+
+The mesh/sim ratio normalizes the machine out of the comparison as far as
+one number can: both executors ran the same work on the same box.  It is
+still mildly hardware-shaped (core count vs the 8 forced devices), so if
+the gate reads persistently high or low on a new runner class with no code
+change, regenerate the committed baseline THERE (`python -m benchmarks.run
+--suite engine --quick`) rather than widening the threshold — the printed
+per-side medians make the two cases easy to tell apart.
+
+Exit codes: 0 pass, 1 regression, 2 usage/config mismatch (e.g. the fresh
+run used a different n/tau/d than the baseline — the comparison would be
+meaningless, so that is an error, not a pass).
+
+    python -m benchmarks.check_regression \
+        --baseline BENCH_engine.json --fresh BENCH_engine.fresh.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def _index(doc: dict) -> dict[tuple[str, int], dict]:
+    return {(r["executor"], r["m"]): r for r in doc.get("results", [])}
+
+
+def _config_key(rec: dict) -> tuple:
+    return tuple(rec.get(k) for k in ("scheme", "n", "d", "kappa", "tau"))
+
+
+def check(baseline: dict, fresh: dict, *, max_ratio_regression: float = 1.25,
+          curve_rtol: float = 1e-2) -> tuple[bool, list[str]]:
+    """Returns (ok, messages).  Raises ValueError on config mismatch."""
+    base_idx, fresh_idx = _index(baseline), _index(fresh)
+    common = sorted(set(base_idx) & set(fresh_idx))
+    if not common:
+        raise ValueError("no (executor, M) records shared between baseline "
+                         "and fresh output — nothing to compare")
+    msgs: list[str] = []
+    ok = True
+
+    # -- wall clock: per-M mesh/sim ratios, gated on the MINIMUM regression
+    # over M.  The ratio normalizes out the machine (both executors ran on
+    # the same box); the min is the flap-proof statistic on an oversubscribed
+    # CI host (8 forced devices on 2 cores jitter individual legs >2x) —
+    # a genuine engine regression slows EVERY M leg, noise does not.
+    ms = [m for (ex, m) in common if ex == "mesh"
+          and ("sim", m) in base_idx and ("sim", m) in fresh_idx]
+    if ms:
+        def ratios(idx):
+            return np.asarray([
+                idx[("mesh", m)]["wall_s"]
+                / max(idx[("sim", m)]["wall_s"], 1e-12) for m in ms])
+        r_base, r_fresh = ratios(base_idx), ratios(fresh_idx)
+        regress = float(np.min(r_fresh / r_base))
+        line = (f"mesh/sim wall ratio over M={ms}: baseline median "
+                f"{float(np.median(r_base)):.2f}x, fresh "
+                f"{float(np.median(r_fresh)):.2f}x "
+                f"(min per-M regression {regress:.2f}x)")
+        if regress > max_ratio_regression:
+            ok = False
+            msgs.append(f"FAIL {line} > {max_ratio_regression:.2f}x allowed")
+        else:
+            msgs.append(f"ok   {line}")
+
+    # -- distortion curves: numerical fingerprint of the engine
+    for key in common:
+        b, f = base_idx[key], fresh_idx[key]
+        if _config_key(b) != _config_key(f):
+            raise ValueError(
+                f"{key}: baseline config {_config_key(b)} != fresh "
+                f"{_config_key(f)} — regenerate the baseline "
+                f"(benchmarks.run --suite engine --quick) instead of "
+                f"comparing different runs")
+        cb = np.asarray(b["distortion"], np.float64)
+        cf = np.asarray(f["distortion"], np.float64)
+        if cb.shape != cf.shape:
+            raise ValueError(
+                f"{key}: curve length {cf.shape} != baseline {cb.shape} "
+                f"— config mismatch")
+        err = float(np.max(np.abs(cf - cb) / (np.abs(cb) + 1e-12)))
+        if err > curve_rtol:
+            ok = False
+            msgs.append(f"FAIL {key}: distortion curve diverged "
+                        f"(max rel err {err:.2e} > {curve_rtol:.0e})")
+        else:
+            msgs.append(f"ok   {key}: curve max rel err {err:.2e}")
+    return ok, msgs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_engine.json")
+    ap.add_argument("--fresh", default="BENCH_engine.fresh.json")
+    ap.add_argument("--max-ratio-regression", type=float, default=1.25,
+                    help="allowed mesh/sim wall-ratio growth (1.25 = +25%%)")
+    ap.add_argument("--curve-rtol", type=float, default=1e-2)
+    args = ap.parse_args(argv)
+    try:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+        with open(args.fresh) as fh:
+            fresh = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        # JSONDecodeError: a truncated fresh file (bench killed mid-write)
+        # is a usage error, not a crash
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    try:
+        ok, msgs = check(baseline, fresh,
+                         max_ratio_regression=args.max_ratio_regression,
+                         curve_rtol=args.curve_rtol)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    for m in msgs:
+        print(m)
+    print("benchmark regression gate:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -106,7 +106,6 @@ def input_specs(cfg: ModelConfig, cell: ShapeCell, *, tau: int | None = None
 def cache_shapes(cfg: ModelConfig, cell: ShapeCell) -> dict:
     """ShapeDtypeStructs of the decode cache for a decode cell."""
     from repro.models import transformer, encdec as _  # noqa
-    from repro.models.api import get_api
 
     if cfg.family == "encdec":
         L, b = cfg.n_layers, cell.global_batch

@@ -19,9 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
-from repro.configs.registry import ShapeCell, uses_fsdp
+from repro.configs.registry import ShapeCell
 from repro.models.common import ModelConfig
 
 PEAK_FLOPS = 197e12        # bf16 / chip

@@ -18,7 +18,6 @@ Everything is derived from (ModelConfig, mesh) — no per-arch hand tables.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

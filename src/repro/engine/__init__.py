@@ -4,7 +4,10 @@ One ``Executor`` API (``engine.api``), three interchangeable backends:
 
   * ``SimExecutor``    — single-device jit/vmap oracles (core.schemes);
   * ``MeshExecutor``   — one worker per JAX device, shard_map + collectives;
-  * ``ThreadExecutor`` — real threads + blob store (core.async_runtime).
+  * ``ThreadExecutor`` — real threads + blob store (core.async_runtime);
+  * ``ElasticMeshExecutor`` — MeshExecutor plus a ``ResizeSchedule``: the
+    worker set grows/shrinks between merge windows (checkpoint -> remesh ->
+    reshard -> resume) without restarting the run (engine.elastic).
 
 plus the pluggable pieces: ``NetworkModel`` (engine.network — instant /
 fixed-latency / geometric-delay communication cost) and ``MergeStrategy``
@@ -13,6 +16,8 @@ LM window step in training.steps).
 """
 
 from repro.engine.api import SCHEMES, Executor, get_executor
+from repro.engine.elastic import (ElasticMeshExecutor, ResizeEvent,
+                                  ResizeSchedule)
 from repro.engine.merge import (AsyncDeltaMerge, AverageMerge, DeltaMerge,
                                 MergeStrategy, get_merge)
 from repro.engine.mesh import MeshExecutor, make_worker_mesh
@@ -28,4 +33,5 @@ __all__ = [
     "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",
     "GeometricDelayNetwork", "get_network",
     "SimExecutor", "MeshExecutor", "ThreadExecutor", "make_worker_mesh",
+    "ElasticMeshExecutor", "ResizeEvent", "ResizeSchedule",
 ]

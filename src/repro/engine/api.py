@@ -50,7 +50,10 @@ class Executor(Protocol):
 
 
 def get_executor(name: str, **kwargs) -> Executor:
-    """Factory: 'sim' | 'mesh' | 'thread' (+ backend kwargs)."""
+    """Factory: 'sim' | 'mesh' | 'thread' | 'elastic' (+ backend kwargs).
+
+    'elastic' requires a ``schedule=`` kwarg (a ``ResizeSchedule``, a list of
+    ``(window, new_m)`` pairs, or a ``"WINDOW:M,..."`` spec string)."""
     if name == "sim":
         from repro.engine.sim import SimExecutor
         return SimExecutor(**kwargs)
@@ -60,5 +63,16 @@ def get_executor(name: str, **kwargs) -> Executor:
     if name == "thread":
         from repro.engine.threads import ThreadExecutor
         return ThreadExecutor(**kwargs)
+    if name == "elastic":
+        from repro.engine.elastic import ElasticMeshExecutor, ResizeSchedule
+        schedule = kwargs.pop("schedule", None)
+        if schedule is None:
+            raise ValueError(
+                "the elastic executor needs a schedule= kwarg "
+                "(ResizeSchedule, [(window, new_m), ...], or 'WINDOW:M,...')")
+        if isinstance(schedule, str):
+            schedule = ResizeSchedule.parse(schedule)
+        return ElasticMeshExecutor(schedule, **kwargs)
     raise ValueError(
-        f"unknown executor {name!r}; choose from ('sim', 'mesh', 'thread')")
+        f"unknown executor {name!r}; choose from "
+        f"('sim', 'mesh', 'thread', 'elastic')")

@@ -23,8 +23,6 @@ bit-for-bit the one a real 8-chip mesh runs.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -132,43 +130,71 @@ class MeshExecutor:
         return self._run_sync(mesh, scheme, w0, data, eval_data, tau=tau,
                               eps0=eps0, decay=decay)
 
+    def run_segment(self, scheme: str, w0: jax.Array, data: jax.Array,
+                    eval_data: jax.Array, *, tau: int, eps0: float = 0.5,
+                    decay: float = 1.0, t0: int = 0,
+                    mesh: Mesh | None = None) -> SchemeResult:
+        """One elastic segment: sync windows starting at local step ``t0``.
+
+        The ``ElasticMeshExecutor`` hook — identical to ``run`` for the
+        synchronous schemes except that the Robbins-Monro step schedule
+        continues from ``t0`` (so a resized run keeps the same eps_t sequence
+        a fixed-M run would see) and the caller may supply the mesh built by
+        ``distributed.elastic.plan_remesh`` for the current worker set."""
+        api.validate_scheme(scheme)
+        if scheme == "async_delta":
+            raise ValueError(
+                "elastic segments support the synchronous schemes "
+                "('average', 'delta'); async_delta has no window barrier "
+                "to resize at")
+        if data.ndim != 3:
+            raise ValueError(f"data must be (M, n, d), got {data.shape}")
+        m = data.shape[0]
+        if mesh is None:
+            mesh = self.mesh if self.mesh is not None else make_worker_mesh(
+                m, self.axis)
+        _validate_mesh(mesh, self.axis, m)
+        return self._run_sync(mesh, scheme, w0, data, eval_data, tau=tau,
+                              eps0=eps0, decay=decay, t0=t0)
+
     # -- synchronous schemes (eqs. 3 and 8) ---------------------------------
 
     def _run_sync(self, mesh: Mesh, scheme: str, w0, data, eval_data, *,
-                  tau: int, eps0: float, decay: float) -> SchemeResult:
+                  tau: int, eps0: float, decay: float,
+                  t0: int = 0) -> SchemeResult:
         axis = self.axis
         n = data.shape[1]
         n_windows = n // tau
         strategy = merge_lib.get_merge(scheme)
         use_pallas = self.use_pallas
 
-        def body(w0_in, data_l, eval_l):
+        def body(w0_in, t0_in, data_l, eval_l):
             stream = data_l[0]                       # (n, d) local shard
             windows = stream[: n_windows * tau].reshape(n_windows, tau, -1)
             ev = eval_l[0]                           # (n_eval, d)
 
             def window(carry, zwin):
-                w_srd, t0 = carry
-                _, w_fin = _local_window(w_srd, zwin, t0, eps0=eps0,
+                w_srd, t = carry
+                _, w_fin = _local_window(w_srd, zwin, t, eps0=eps0,
                                          decay=decay, use_pallas=use_pallas)
                 w_srd, _ = strategy(w_srd, w_fin, axis)
-                t0 = t0 + tau
+                t = t + tau
                 c = jax.lax.pmean(vq.distortion(ev, w_srd), axis)
-                return (w_srd, t0), c
+                return (w_srd, t), c
 
             (w_srd, _), curve = jax.lax.scan(
-                window, (w0_in, jnp.asarray(0, jnp.int32)),
-                windows)
+                window, (w0_in, t0_in), windows)
             return w_srd, curve
 
         cache_key = ("sync", scheme, mesh, w0.shape, data.shape,
                      eval_data.shape, tau, eps0, decay, use_pallas)
         if cache_key not in self._compiled:
             self._compiled[cache_key] = jax.jit(compat.shard_map(
-                body, mesh, in_specs=(P(), P(axis), P(axis)),
+                body, mesh, in_specs=(P(), P(), P(axis), P(axis)),
                 out_specs=(P(), P()),
                 axis_names=frozenset({axis}), check_vma=False))
-        w_final, curve = self._compiled[cache_key](w0, data, eval_data)
+        w_final, curve = self._compiled[cache_key](
+            w0, jnp.asarray(t0, jnp.int32), data, eval_data)
         wt = self.network.window_ticks(tau)
         ticks = jnp.arange(1, n_windows + 1, dtype=jnp.int32) * wt
         return SchemeResult(w_shared=w_final, wall_ticks=ticks,

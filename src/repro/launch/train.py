@@ -12,6 +12,14 @@ on any of the three backends:
         --executor mesh --scheme delta --workers 8 --tau 10 \
         [--network geometric --p-delay 0.5]
 
+Elastic VQ — the mesh run grows/shrinks its worker set mid-stream (a
+resharding event per ``--resize`` entry, not a restart); with ``--ckpt-dir``
+each resize checkpoints the shared prototypes, and ``--resume`` continues
+from the latest resize point:
+
+    PYTHONPATH=src python -m repro.launch.train --mode vq --executor mesh \
+        --workers 8 --resize 20:4,40:8 [--ckpt-dir /tmp/ck] [--resume]
+
 Runs on whatever devices exist (CPU smoke through full meshes): builds the
 mesh, shards state via the same rules the dry-run proves out, streams the
 deterministic synthetic pipeline, checkpoints asynchronously, and restarts
@@ -24,7 +32,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointing import Checkpointer
@@ -32,7 +39,6 @@ from repro.configs import registry
 from repro.data.pipeline import DataConfig, lm_batch
 from repro.distributed import sharding
 from repro.launch.mesh import make_host_mesh
-from repro.models.api import get_api
 from repro.models import common as model_common
 from repro.optim import optimizers
 from repro.training import steps as steps_lib
@@ -56,7 +62,29 @@ def run_vq(args) -> int:
     elif args.network == "geometric":
         net_kw["p_delay"] = args.p_delay
     network = get_network(args.network, **net_kw)
-    if args.executor == "thread":
+    if args.resume and not args.resize:
+        # only the elastic path has VQ resume state; a plain executor would
+        # silently restart from scratch, which is not a resume
+        print("error: --resume in VQ mode needs --resize (elastic runs "
+              "checkpoint at resize events; plain runs have no VQ "
+              "checkpoint to restore)")
+        return 2
+    ckpt = None
+    if args.resize:
+        if args.executor != "mesh":
+            print(f"error: --resize is a mesh-executor feature (elastic "
+                  f"resharding of the device mesh); got --executor "
+                  f"{args.executor}")
+            return 2
+        if args.resume and not args.ckpt_dir:
+            print("error: --resume needs --ckpt-dir (the elastic resume "
+                  "restores the latest resize checkpoint)")
+            return 2
+        ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+        ex_name = "elastic"
+        ex_kw = {"schedule": args.resize, "network": network,
+                 "checkpointer": ckpt, "resume": args.resume}
+    elif args.executor == "thread":
         # real threads have no tick clock: tick-based NetworkModels don't
         # apply, and silently dropping them would mislabel the run
         if args.network != "instant":
@@ -64,20 +92,27 @@ def run_vq(args) -> int:
                   f"thread backend models communication in seconds — use "
                   f"--comm-delay-s instead")
             return 2
+        ex_name = args.executor
         ex_kw = {"duration_s": args.duration_s,
                  "comm_delay_s": args.comm_delay_s}
     else:
+        ex_name = args.executor
         ex_kw = {"network": network}
-    executor = get_executor(args.executor, **ex_kw)
+    try:
+        executor = get_executor(ex_name, **ex_kw)
+    except ValueError as e:  # bad resize spec
+        print(f"error: {e}")
+        return 2
 
     print(f"executor={executor.name} scheme={args.scheme} "
           f"M={args.workers} tau={args.tau} network={args.network} "
-          f"devices={len(jax.devices())}")
+          f"devices={len(jax.devices())}"
+          + (f" resize={args.resize}" if args.resize else ""))
     t0 = time.time()
     try:
         res = executor.run(args.scheme, w0, data, eval_data, tau=args.tau,
                            eps0=args.eps0, key=ka)
-    except ValueError as e:  # bad scheme/mesh/shape combination
+    except ValueError as e:  # bad scheme/mesh/shape/resume combination
         print(f"error: {e}")
         return 2
     jax.block_until_ready(res.w_shared)
@@ -88,9 +123,17 @@ def run_vq(args) -> int:
     unit = "s" if executor.name == "thread" else "ticks"
     for i in idx:
         print(f"  {unit} {float(ticks[i]):>8.1f}  C = {curve[i]:.5f}")
+    for ev in getattr(executor, "resize_events", []):
+        ck = (f" ckpt@{ev.checkpoint_step}"
+              if ev.checkpoint_step is not None else "")
+        print(f"  resize @window {ev.window}: M {ev.old_m} -> {ev.new_m} "
+              f"(late points merged: {ev.late_points}, "
+              f"{ev.wall_s * 1e3:.1f} ms{ck})")
     pts = args.workers * args.points
     print(f"done: C(final)={curve[-1]:.5f} in {wall:.2f}s wall "
           f"({wall / pts * 1e6:.2f} us/point over {pts} points)")
+    if ckpt is not None:
+        ckpt.wait()
     return 0
 
 
@@ -128,6 +171,9 @@ def main(argv=None) -> int:
                     default="instant")
     ap.add_argument("--latency", type=int, default=1)
     ap.add_argument("--p-delay", type=float, default=0.5)
+    ap.add_argument("--resize", default="",
+                    help="elastic resize schedule 'WINDOW:M,...' (e.g. "
+                         "'20:4,40:8'); mesh executor only")
     ap.add_argument("--duration-s", type=float, default=2.0,
                     help="thread backend: wall seconds to run")
     ap.add_argument("--comm-delay-s", type=float, default=0.0,

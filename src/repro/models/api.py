@@ -4,8 +4,6 @@ from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
-import jax
-
 from repro.models import encdec, transformer
 from repro.models.common import ModelConfig
 

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.models import common
-from repro.models.common import ModelConfig, rms_norm, rope
+from repro.models.common import ModelConfig, rope
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,6 @@ positions (TPU-idiomatic; documented in DESIGN.md §8).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

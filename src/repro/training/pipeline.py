@@ -20,15 +20,14 @@ the FSDP/TP weight traffic of the non-PP layout.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.models import blocks, common
+from repro.models import blocks
 from repro.models.common import ModelConfig, rms_norm
 
 

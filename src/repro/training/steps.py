@@ -24,8 +24,7 @@ Three granularities:
 from __future__ import annotations
 
 import enum
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

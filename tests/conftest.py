@@ -2,9 +2,31 @@ import os
 
 # Tests run on the default single CPU device (smoke realism); ONLY the
 # dry-run module forces 512 placeholder devices.  A couple of distribution
-# tests want a handful of devices — they get 8.
+# tests want a handful of devices — they get 8.  CI overrides XLA_FLAGS to
+# run the whole suite under BOTH 1 and 8 forced devices (the 1-device leg
+# catches degenerate-mesh bugs the 8-device leg hides); tests that
+# intrinsically need a multi-device mesh declare it with
+# ``@pytest.mark.devices(n)`` and are skipped on smaller legs.
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "devices(n): test needs at least n JAX devices (skipped on the "
+        "1-device CI leg)")
+
+
+def pytest_collection_modifyitems(config, items):
+    n_avail = len(jax.devices())
+    for item in items:
+        mark = item.get_closest_marker("devices")
+        if mark and mark.args and mark.args[0] > n_avail:
+            item.add_marker(pytest.mark.skip(
+                reason=f"needs {mark.args[0]} devices, have {n_avail} "
+                       f"(--xla_force_host_platform_device_count)"))

@@ -1,7 +1,5 @@
 """Unit tests for the HLO collective accounting and the roofline model."""
 
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import registry

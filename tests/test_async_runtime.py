@@ -2,7 +2,6 @@
 
 import jax
 import numpy as np
-import pytest
 
 from repro.core import async_runtime
 from repro.data import synthetic

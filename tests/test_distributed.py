@@ -30,6 +30,7 @@ def _batchify(cfg, b, t, tau=None):
     return {"tokens": toks, "labels": toks}
 
 
+@pytest.mark.devices(8)
 def test_param_specs_divisibility_policy():
     """Heads sharded only when divisible; MLP always; norms replicated."""
     mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -45,6 +46,7 @@ def test_param_specs_divisibility_policy():
     assert specs2["blocks"]["w_gate"] == P(None, None, "model")
 
 
+@pytest.mark.devices(8)
 def test_param_specs_fsdp_adds_data_axis():
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     cfg = registry.get_smoke_config("granite_8b")
@@ -53,6 +55,7 @@ def test_param_specs_fsdp_adds_data_axis():
     assert specs["blocks"]["wq"] == P(None, "data", "model")
 
 
+@pytest.mark.devices(8)
 @pytest.mark.parametrize("merge", [steps_lib.Merge.ALLREDUCE,
                                    steps_lib.Merge.AVERAGE,
                                    steps_lib.Merge.DELTA,
@@ -78,6 +81,7 @@ def test_window_step_runs_and_is_finite(merge):
     assert max(jax.tree.leaves(moved)) > 0
 
 
+@pytest.mark.devices(2)
 def test_delta_merge_matches_sequential_when_single_worker():
     """With identical per-pod batches, DELTA with M pods applies M times the
     displacement (paper eq. 8: sum, not mean) — while AVERAGE reproduces the
@@ -126,6 +130,7 @@ def test_delta_merge_matches_sequential_when_single_worker():
                  state0["params"])
 
 
+@pytest.mark.devices(8)
 def test_elastic_restore_across_mesh_sizes(tmp_path):
     """Checkpoint written under one mesh restores onto a different one."""
     from repro.checkpoint.checkpointing import Checkpointer
@@ -158,6 +163,7 @@ def test_elastic_restore_across_mesh_sizes(tmp_path):
     jax.tree.map(np.testing.assert_array_equal, host_a, host_b)
 
 
+@pytest.mark.devices(2)
 def test_delta_sparse_full_density_equals_delta():
     """DELTA_SPARSE with frac=1.0 must reproduce DELTA exactly (the
     compression path is lossless when everything is kept)."""
@@ -192,6 +198,7 @@ def test_delta_sparse_full_density_equals_delta():
     assert rmax < 1e-6
 
 
+@pytest.mark.devices(2)
 def test_delta_sparse_low_density_finite_and_bounded():
     mesh = jax.make_mesh((2, 1, 1), ("pod", "data", "model"))
     model_common.set_run_options(mesh=None)
@@ -254,6 +261,7 @@ def test_dvq_window_matches_scheme_delta():
     assert int(t) == tau
 
 
+@pytest.mark.devices(8)
 def test_dvq_minibatch_reduces_distortion_on_mesh():
     import jax.numpy as jnp
     from repro.core import dvq, vq
@@ -274,6 +282,7 @@ def test_dvq_minibatch_reduces_distortion_on_mesh():
     assert after < before
 
 
+@pytest.mark.devices(8)
 def test_pipeline_parallel_matches_reference():
     """GPipe over 'pod': pipelined loss == plain loss; grads flow."""
     from repro.training import pipeline

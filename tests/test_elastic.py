@@ -1,0 +1,381 @@
+"""Elastic resharding (ISSUE 2): ResizeSchedule, ElasticMeshExecutor,
+plan_remesh edge cases, and the CI benchmark regression gate.
+
+The acceptance test: an 8->4->8 mid-stream resize must end within rtol 1e-2
+of the fixed-M sim oracle on the same total sample budget, without a
+restart.  Multi-device tests carry ``@pytest.mark.devices(n)`` so the
+1-device CI leg skips them.
+"""
+
+import pathlib
+import sys
+
+from repro.xla_flags import force_host_devices
+
+force_host_devices(8)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.checkpoint.checkpointing import Checkpointer  # noqa: E402
+from repro.core import schemes  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.distributed import elastic as elastic_lib  # noqa: E402
+from repro.engine import (ElasticMeshExecutor, InstantNetwork,  # noqa: E402
+                          ResizeSchedule, get_executor)
+from repro.launch import train as train_cli  # noqa: E402
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks import check_regression  # noqa: E402
+
+KEY = jax.random.PRNGKey(42)
+TAU = 10
+
+
+def _setup(m, n=600, d=8, kappa=16):
+    kd, kw = jax.random.split(KEY)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, :200]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+    return data, eval_data, w0
+
+
+# ---------------------------------------------------------------------------
+# ResizeSchedule
+# ---------------------------------------------------------------------------
+
+def test_resize_schedule_parse_and_validate():
+    s = ResizeSchedule.parse("20:4, 40:8")
+    assert [(e.window, e.new_m) for e in s] == [(20, 4), (40, 8)]
+    assert len(s) == 2
+    assert len(ResizeSchedule([(5, 2)])) == 1  # tuple form
+
+    with pytest.raises(ValueError, match="bad resize spec"):
+        ResizeSchedule.parse("20-4")
+    with pytest.raises(ValueError, match="empty resize spec"):
+        ResizeSchedule.parse(" , ")
+    with pytest.raises(ValueError, match="strictly increasing"):
+        ResizeSchedule([(20, 4), (20, 8)])
+    with pytest.raises(ValueError, match="strictly increasing"):
+        ResizeSchedule([(40, 4), (20, 8)])
+    with pytest.raises(ValueError, match="window must be >= 1"):
+        ResizeSchedule([(0, 4)])
+    with pytest.raises(ValueError, match="M must be >= 1"):
+        ResizeSchedule([(10, 0)])
+
+
+def test_elastic_factory_and_validation():
+    ex = get_executor("elastic", schedule="10:2")
+    assert ex.name == "elastic"
+    assert [(e.window, e.new_m) for e in ex.schedule] == [(10, 2)]
+    with pytest.raises(ValueError, match="schedule"):
+        get_executor("elastic")
+    with pytest.raises(ValueError, match="late_policy"):
+        ElasticMeshExecutor([(10, 2)], late_policy="teleport")
+    with pytest.raises(ValueError, match="resume=True needs a checkpointer"):
+        ElasticMeshExecutor([(10, 2)], resume=True)
+
+    data, eval_data, w0 = _setup(1, n=100)
+    with pytest.raises(ValueError, match="async_delta"):
+        ex.run("async_delta", w0, data, eval_data, tau=TAU)
+    with pytest.raises(ValueError, match="unknown scheme"):
+        ex.run("gossip", w0, data, eval_data, tau=TAU)
+    with pytest.raises(ValueError, match=r"\(M, n, d\)"):
+        ex.run("delta", w0, data[0], eval_data, tau=TAU)
+    with pytest.raises(ValueError, match="at least one"):
+        ex.run("delta", w0, data[:, :5], eval_data, tau=TAU)
+
+
+# ---------------------------------------------------------------------------
+# plan_remesh edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+def test_plan_remesh_shrink_to_one():
+    p = elastic_lib.plan_remesh(1, prev_data=8, prev_model=1)
+    assert (p.data, p.model) == (1, 1) and p.tp_preserved
+    # fewer survivors than the TP width AND only one device: degenerate mesh
+    p = elastic_lib.plan_remesh(1, prev_data=2, prev_model=4)
+    assert (p.data, p.model) == (1, 1) and not p.tp_preserved
+
+
+def test_plan_remesh_non_power_of_two_survivors():
+    p = elastic_lib.plan_remesh(6, prev_data=8, prev_model=1)
+    assert (p.data, p.model) == (6, 1) and p.dropped_hosts == 0
+    p = elastic_lib.plan_remesh(7, prev_data=4, prev_model=2)
+    assert p.model == 2 and p.data == 3 and p.dropped_hosts == 1
+    assert p.tp_preserved
+
+
+def test_plan_remesh_tp_axis_preservation():
+    # enough survivors: TP width survives, data axis shrinks
+    p = elastic_lib.plan_remesh(12, prev_data=4, prev_model=4)
+    assert p.model == 4 and p.data == 3 and p.tp_preserved
+    # not enough: largest power-of-two TP that fits, flagged not preserved
+    p = elastic_lib.plan_remesh(3, prev_data=2, prev_model=4)
+    assert not p.tp_preserved and p.model == 2 and p.data == 1
+
+
+@pytest.mark.devices(2)
+def test_worker_mesh_from_plan():
+    from repro.engine import make_worker_mesh
+    plan = elastic_lib.plan_remesh(2, prev_data=4, prev_model=1)
+    mesh = make_worker_mesh(plan.data * plan.model, "workers")
+    assert mesh.axis_names == ("workers",) and mesh.devices.shape == (2,)
+    with pytest.raises(ValueError, match="devices"):
+        make_worker_mesh(4096)
+
+
+# ---------------------------------------------------------------------------
+# elastic execution vs the fixed-M oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(8)
+def test_elastic_without_events_is_the_mesh_oracle():
+    """A schedule that never fires must reproduce scheme_delta exactly —
+    the elastic pool/reshard plumbing is a no-op at fixed M."""
+    data, eval_data, w0 = _setup(8)
+    oracle = schemes.scheme_delta(w0, data, eval_data, tau=TAU)
+    ex = ElasticMeshExecutor([(10_000, 4)], network=InstantNetwork())
+    res = ex.run("delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_allclose(np.asarray(res.distortion),
+                               np.asarray(oracle.distortion),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(res.w_shared),
+                               np.asarray(oracle.w_shared),
+                               rtol=1e-4, atol=1e-6)
+    assert ex.resize_events == []
+
+
+@pytest.mark.devices(8)
+def test_elastic_8_4_8_matches_fixed_oracle():
+    """ISSUE 2 acceptance: mid-stream 8->4->8 ends within rtol 1e-2 of the
+    fixed-M oracle on the same total sample budget, without a restart."""
+    data, eval_data, w0 = _setup(8)
+    oracle = schemes.scheme_delta(w0, data, eval_data, tau=TAU)
+    ex = ElasticMeshExecutor([(20, 4), (40, 8)], network=InstantNetwork())
+    res = ex.run("delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_allclose(float(res.distortion[-1]),
+                               float(oracle.distortion[-1]), rtol=1e-2)
+    assert [(e.old_m, e.new_m) for e in ex.resize_events] == [(8, 4), (4, 8)]
+    assert ex.resize_events[0].late_points == 4 * TAU  # 4 departing workers
+    # M=4 windows consume half the points, so the elastic run has MORE
+    # windows than the fixed-M oracle on the same budget
+    assert len(res.distortion) > len(oracle.distortion)
+    # wall ticks stay strictly increasing across the resize boundaries
+    ticks = np.asarray(res.wall_ticks)
+    assert (np.diff(ticks) > 0).all()
+
+
+@pytest.mark.devices(4)
+def test_elastic_shrink_to_single_worker():
+    data, eval_data, w0 = _setup(4, n=400)
+    ex = ElasticMeshExecutor([(10, 1)], network=InstantNetwork())
+    res = ex.run("delta", w0, data, eval_data, tau=TAU)
+    assert float(res.distortion[-1]) < float(res.distortion[0])
+    assert ex.resize_events[0].new_m == 1
+    # after the shrink, each window consumes 1*tau of the pool
+    assert len(res.distortion) == 10 + (4 * 400 - 10 * 4 * TAU
+                                        - 3 * TAU) // TAU
+
+
+@pytest.mark.devices(8)
+def test_elastic_grow_clamps_to_available_devices():
+    data, eval_data, w0 = _setup(4, n=400)
+    ex = ElasticMeshExecutor([(10, 64)], network=InstantNetwork())
+    res = ex.run("delta", w0, data, eval_data, tau=TAU)
+    assert ex.resize_events[0].new_m == len(jax.devices())
+    assert float(res.distortion[-1]) < float(res.distortion[0])
+
+
+@pytest.mark.devices(4)
+def test_elastic_late_delta_merge_vs_drop():
+    """'merge' integrates the departing workers' stale-window deltas
+    (damped eq. 8), 'drop' discards them — the prototypes must differ, and
+    only 'merge' consumes the late pool points."""
+    data, eval_data, w0 = _setup(4, n=400)
+    ex_m = ElasticMeshExecutor([(10, 2)], network=InstantNetwork())
+    ex_d = ElasticMeshExecutor([(10, 2)], network=InstantNetwork(),
+                               late_policy="drop")
+    r_m = ex_m.run("delta", w0, data, eval_data, tau=TAU)
+    r_d = ex_d.run("delta", w0, data, eval_data, tau=TAU)
+    assert ex_m.resize_events[0].late_points == 2 * TAU
+    assert ex_d.resize_events[0].late_points == 0
+    assert not np.allclose(np.asarray(r_m.w_shared), np.asarray(r_d.w_shared))
+    # both still converge
+    assert float(r_m.distortion[-1]) < float(r_m.distortion[0])
+    assert float(r_d.distortion[-1]) < float(r_d.distortion[0])
+
+
+@pytest.mark.devices(4)
+def test_elastic_average_scheme_runs():
+    data, eval_data, w0 = _setup(4, n=300)
+    ex = ElasticMeshExecutor([(10, 2)], network=InstantNetwork())
+    res = ex.run("average", w0, data, eval_data, tau=TAU)
+    assert float(res.distortion[-1]) < float(res.distortion[0])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume (the elastic restore path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(4)
+def test_elastic_checkpoint_and_resume_bit_identical(tmp_path):
+    """A run killed after the resize event and resumed from its checkpoint
+    continues bit-identically: same final prototypes, same curve suffix."""
+    data, eval_data, w0 = _setup(4, n=400)
+    ck = Checkpointer(str(tmp_path))
+    ex1 = ElasticMeshExecutor([(10, 2)], network=InstantNetwork(),
+                              checkpointer=ck)
+    r1 = ex1.run("delta", w0, data, eval_data, tau=TAU)
+    ck.wait()
+    assert ex1.resize_events[0].checkpoint_step == 10
+    assert ck.latest_step() == 10
+
+    ex2 = ElasticMeshExecutor([(10, 2)], network=InstantNetwork(),
+                              checkpointer=ck, resume=True)
+    r2 = ex2.run("delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_array_equal(np.asarray(r1.w_shared),
+                                  np.asarray(r2.w_shared))
+    # the resumed run re-executes only the post-resize windows
+    assert len(r2.distortion) < len(r1.distortion)
+    np.testing.assert_array_equal(
+        np.asarray(r1.distortion[-len(r2.distortion):]),
+        np.asarray(r2.distortion))
+    np.testing.assert_array_equal(
+        np.asarray(r1.wall_ticks[-len(r2.wall_ticks):]),
+        np.asarray(r2.wall_ticks))
+    # the resize already happened before the checkpoint: none fire on resume
+    assert ex2.resize_events == []
+
+
+@pytest.mark.devices(4)
+def test_elastic_resume_of_completed_run_returns_result(tmp_path):
+    """A resize at the last consumable window checkpoints with the pool
+    exhausted; resuming such a run must report the restored state, not
+    raise 'produced no windows'."""
+    data, eval_data, w0 = _setup(4, n=100)  # budget = 400 = 10 windows of 40
+    ck = Checkpointer(str(tmp_path))
+    ex1 = ElasticMeshExecutor([(10, 2)], network=InstantNetwork(),
+                              checkpointer=ck)
+    r1 = ex1.run("delta", w0, data, eval_data, tau=TAU)
+    ck.wait()
+    assert ck.latest_step() == 10  # checkpointed at the pool's last window
+
+    ex2 = ElasticMeshExecutor([(10, 2)], network=InstantNetwork(),
+                              checkpointer=ck, resume=True)
+    r2 = ex2.run("delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_array_equal(np.asarray(r1.w_shared),
+                                  np.asarray(r2.w_shared))
+    assert len(r2.distortion) == 1 and np.isfinite(float(r2.distortion[0]))
+
+
+# ---------------------------------------------------------------------------
+# launch/train.py --resize CLI (acceptance path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(4)
+def test_train_cli_elastic_run(tmp_path, capsys):
+    rc = train_cli.main([
+        "--mode", "vq", "--executor", "mesh", "--workers", "4",
+        "--points", "300", "--resize", "10:2,20:4",
+        "--ckpt-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "executor=elastic" in out and "resize=10:2,20:4" in out
+    assert "resize @window 10: M 4 -> 2" in out
+    assert "resize @window 20: M 2 -> 4" in out
+    assert "ckpt@" in out
+
+
+def test_train_cli_resize_rejects_non_mesh(capsys):
+    rc = train_cli.main(["--mode", "vq", "--executor", "sim",
+                         "--resize", "10:2"])
+    assert rc == 2
+    assert "mesh-executor feature" in capsys.readouterr().out
+
+
+def test_train_cli_resize_rejects_bad_spec(capsys):
+    rc = train_cli.main(["--mode", "vq", "--executor", "mesh",
+                         "--resize", "banana"])
+    assert rc == 2
+    assert "bad resize spec" in capsys.readouterr().out
+
+
+def test_train_cli_vq_resume_requires_resize(capsys):
+    """A plain VQ run has no checkpoint to restore — silently restarting
+    would be the non-resume the elastic executor refuses."""
+    rc = train_cli.main(["--mode", "vq", "--executor", "mesh", "--resume"])
+    assert rc == 2
+    assert "needs --resize" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# benchmark regression gate (CI satellite)
+# ---------------------------------------------------------------------------
+
+def _bench_doc(wall, curve_shift=0.0):
+    results = []
+    for m, w in wall.items():
+        for ex, ws in (("sim", w[0]), ("mesh", w[1])):
+            results.append({
+                "executor": ex, "m": m, "scheme": "delta", "n": 400, "d": 8,
+                "kappa": 16, "tau": 10, "wall_s": ws,
+                "distortion": [0.5 - 0.01 * i + curve_shift
+                               for i in range(5)]})
+    return {"suite": "engine", "results": results}
+
+
+def test_regression_gate_passes_on_identical_runs():
+    doc = _bench_doc({1: (0.001, 0.002), 8: (0.002, 0.03)})
+    ok, msgs = check_regression.check(doc, doc)
+    assert ok and any("wall ratio" in m for m in msgs)
+
+
+def test_regression_gate_ignores_single_leg_noise():
+    base = _bench_doc({1: (0.001, 0.002), 8: (0.002, 0.03)})
+    noisy = _bench_doc({1: (0.001, 0.002), 8: (0.002, 0.09)})  # one 3x blip
+    ok, _ = check_regression.check(base, noisy)
+    assert ok  # min-over-M: a single slow leg is noise, not a regression
+
+
+def test_regression_gate_fails_on_uniform_slowdown():
+    base = _bench_doc({1: (0.001, 0.002), 8: (0.002, 0.03)})
+    slow = _bench_doc({1: (0.001, 0.004), 8: (0.002, 0.06)})  # all legs 2x
+    ok, msgs = check_regression.check(base, slow)
+    assert not ok and any("FAIL" in m and "wall ratio" in m for m in msgs)
+
+
+def test_regression_gate_fails_on_curve_divergence():
+    base = _bench_doc({1: (0.001, 0.002)})
+    drift = _bench_doc({1: (0.001, 0.002)}, curve_shift=0.2)
+    ok, msgs = check_regression.check(base, drift)
+    assert not ok and any("curve diverged" in m for m in msgs)
+
+
+def test_regression_gate_rejects_config_mismatch():
+    base = _bench_doc({1: (0.001, 0.002)})
+    other = _bench_doc({1: (0.001, 0.002)})
+    for r in other["results"]:
+        r["tau"] = 20
+    with pytest.raises(ValueError, match="config"):
+        check_regression.check(base, other)
+    with pytest.raises(ValueError, match="nothing to compare"):
+        check_regression.check(base, {"results": []})
+
+
+def test_regression_gate_cli(tmp_path):
+    import json
+    base = _bench_doc({1: (0.001, 0.002), 8: (0.002, 0.03)})
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(base))
+    assert check_regression.main(["--baseline", str(bp),
+                                  "--fresh", str(fp)]) == 0
+    assert check_regression.main(["--baseline", str(bp),
+                                  "--fresh", str(tmp_path / "nope.json")]) == 2
+    # truncated JSON (bench killed mid-write) is exit 2, not a traceback
+    trunc = tmp_path / "trunc.json"
+    trunc.write_text('{"suite": "engine", "resu')
+    assert check_regression.main(["--baseline", str(bp),
+                                  "--fresh", str(trunc)]) == 2

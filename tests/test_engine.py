@@ -47,7 +47,8 @@ def _assert_curves_match(a, b, rtol=1e-4):
 # engine/oracle equivalence
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("m", [1, 8])
+@pytest.mark.parametrize(
+    "m", [1, pytest.param(8, marks=pytest.mark.devices(8))])
 def test_mesh_delta_matches_oracle(m):
     """Acceptance: MeshExecutor delta curves == scheme_delta, M=1 and M=8."""
     data, eval_data, w0 = _setup(m)
@@ -60,7 +61,8 @@ def test_mesh_delta_matches_oracle(m):
                                rtol=1e-4, atol=1e-6)
 
 
-@pytest.mark.parametrize("m", [1, 8])
+@pytest.mark.parametrize(
+    "m", [1, pytest.param(8, marks=pytest.mark.devices(8))])
 def test_mesh_average_matches_oracle(m):
     data, eval_data, w0 = _setup(m)
     oracle = schemes.scheme_average(w0, data, eval_data, tau=TAU)
@@ -69,6 +71,7 @@ def test_mesh_average_matches_oracle(m):
     _assert_curves_match(res, oracle)
 
 
+@pytest.mark.devices(8)
 def test_mesh_async_matches_oracle_with_shared_delays():
     """Same NetworkModel draw => the mesh masked-merge protocol replays the
     eq.-(9) tick simulation exactly."""
@@ -85,6 +88,7 @@ def test_mesh_async_matches_oracle_with_shared_delays():
                                np.asarray(sim.w_shared), rtol=1e-4, atol=1e-6)
 
 
+@pytest.mark.devices(4)
 def test_mesh_pallas_and_reference_inner_loops_agree():
     data, eval_data, w0 = _setup(4)
     a = MeshExecutor(network=InstantNetwork(), use_pallas=True).run(
@@ -132,6 +136,7 @@ def test_thread_executor_smoke():
 # mesh / axis validation
 # ---------------------------------------------------------------------------
 
+@pytest.mark.devices(8)
 def test_make_worker_mesh_validates():
     with pytest.raises(ValueError, match="non-empty"):
         make_worker_mesh(2, axis="")
@@ -150,12 +155,14 @@ def test_mesh_executor_rejects_empty_axis_names():
         MeshExecutor(mesh=mesh, axis="workers")
 
 
+@pytest.mark.devices(2)
 def test_mesh_executor_rejects_missing_axis():
     mesh = make_worker_mesh(2, axis="workers")
     with pytest.raises(ValueError, match="not in mesh axes"):
         MeshExecutor(mesh=mesh, axis="pods")
 
 
+@pytest.mark.devices(4)
 def test_mesh_executor_rejects_device_count_mismatch():
     data, eval_data, w0 = _setup(4)
     mesh = make_worker_mesh(2)  # 2 devices for 4 worker streams
@@ -208,6 +215,7 @@ def test_network_models():
         GeometricDelayNetwork(p_delay=0.0)
 
 
+@pytest.mark.devices(4)
 def test_fixed_latency_network_stretches_wall_clock():
     """Same merges, same curve VALUES — but each window costs more ticks, so
     convergence in wall time is slower (the paper's communication tax)."""

@@ -9,7 +9,6 @@ These validate the REPRODUCTION itself:
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import async_vq, schemes, vq

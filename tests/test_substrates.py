@@ -195,7 +195,6 @@ def test_prefill_fills_cache_exactly(arch_id):
     prefill/decode divergence (single-token decode is effectively dropless).
     """
     import dataclasses
-    from repro.models import transformer
     cfg = registry.get_smoke_config(arch_id)
     if cfg.family == "moe":
         cfg = dataclasses.replace(cfg, capacity_factor=8.0)
