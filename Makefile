@@ -4,18 +4,23 @@
 #   make bench-smoke   — quick benchmark pass: engine executor suite
 #   make bench-engine  — full Sim-vs-Mesh executor benchmark -> BENCH_engine.json
 #   make bench-elastic — elastic resize-event cost benchmark -> BENCH_elastic.json
+#   make bench-serve   — serving suite (lookup/service/hot-swap) -> BENCH_serve.json
+#   make serve-smoke   — quantization service end to end: live elastic trainer
+#                        hot-swapping codebooks under open-loop load
 #   make ci-local      — mirror the full CI matrix locally (lint, tier-1 under
-#                        1 AND 8 forced devices, fresh engine bench + the
-#                        regression gate) so CI failures reproduce without pushing
+#                        1 AND 8 forced devices, fresh engine + serve benches +
+#                        the regression gates) so CI failures reproduce without
+#                        pushing
 #   make example-mesh  — the 8-device mesh demo against the sim oracles
 #   make example-elastic — the 8->4->8 elastic resharding demo
+#   make example-serve — the train-while-serve demo (examples/serve_vq.py)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
 
-.PHONY: test lint bench-smoke bench-engine bench-elastic ci-local \
-        example-mesh example-elastic
+.PHONY: test lint bench-smoke bench-engine bench-elastic bench-serve \
+        serve-smoke ci-local example-mesh example-elastic example-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -37,12 +42,24 @@ bench-engine:
 bench-elastic:
 	$(PY) -m benchmarks.run --suite elastic
 
+bench-serve:
+	$(PY) -m benchmarks.run --suite serve
+
+serve-smoke:
+	$(PY) -m repro.launch.serve --mode vq --smoke --train-publish
+
 ci-local: lint
 	XLA_FLAGS=--xla_force_host_platform_device_count=1 $(PY) -m pytest -q
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest -q
+	XLA_FLAGS=--xla_force_host_platform_device_count=1 \
+		$(PY) -m repro.launch.serve --mode vq --smoke --train-publish
+	$(PY) -m repro.launch.serve --mode vq --smoke --train-publish
 	$(PY) -m benchmarks.run --suite engine --quick --out BENCH_engine.fresh.json
 	$(PY) -m benchmarks.check_regression \
 		--baseline BENCH_engine.json --fresh BENCH_engine.fresh.json
+	$(PY) -m benchmarks.run --suite serve --quick --out BENCH_serve.fresh.json
+	$(PY) -m benchmarks.check_regression \
+		--baseline BENCH_serve.json --fresh BENCH_serve.fresh.json
 	$(PY) -m benchmarks.run --suite elastic --quick --out BENCH_elastic.fresh.json
 
 example-mesh:
@@ -50,3 +67,6 @@ example-mesh:
 
 example-elastic:
 	$(PY) examples/elastic_vq.py
+
+example-serve:
+	$(PY) examples/serve_vq.py

@@ -1,7 +1,10 @@
-"""CI benchmark regression gate for the engine suite.
+"""CI benchmark regression gate for the engine and serve suites.
 
-Diffs a fresh ``benchmarks.run --suite engine --quick`` output against the
-committed ``BENCH_engine.json`` baseline and FAILS (exit 1) when:
+The suite is auto-detected from the baseline JSON's ``suite`` field.
+
+**engine**: diffs a fresh ``benchmarks.run --suite engine --quick`` output
+against the committed ``BENCH_engine.json`` baseline and FAILS (exit 1)
+when:
 
   * the mesh-vs-sim wall-clock ratio regresses by more than
     ``--max-ratio-regression`` on every M leg (default 1.25, i.e. >25%
@@ -19,12 +22,26 @@ change, regenerate the committed baseline THERE (`python -m benchmarks.run
 --suite engine --quick`) rather than widening the threshold — the printed
 per-side medians make the two cases easy to tell apart.
 
+**serve**: diffs a fresh ``--suite serve --quick`` output against the
+committed ``BENCH_serve.json`` and FAILS when:
+
+  * the micro-batching speedup (batched sharded-lookup rows/s over the
+    unbatched single-dispatch figure, both measured on the same box — the
+    serve analogue of the engine's machine-normalizing mesh/sim ratio)
+    regresses by more than ``--max-ratio-regression``; or
+  * the speedup drops below ``--min-speedup`` (default 4x, the serving
+    acceptance bar); or
+  * the hot-swap leg failed any request or served non-monotonic codebook
+    versions (functional, machine-independent).
+
 Exit codes: 0 pass, 1 regression, 2 usage/config mismatch (e.g. the fresh
 run used a different n/tau/d than the baseline — the comparison would be
 meaningless, so that is an error, not a pass).
 
     python -m benchmarks.check_regression \
         --baseline BENCH_engine.json --fresh BENCH_engine.fresh.json
+    python -m benchmarks.check_regression \
+        --baseline BENCH_serve.json --fresh BENCH_serve.fresh.json
 """
 
 from __future__ import annotations
@@ -104,13 +121,70 @@ def check(baseline: dict, fresh: dict, *, max_ratio_regression: float = 1.25,
     return ok, msgs
 
 
+def _serve_rec(doc: dict, kind: str) -> dict | None:
+    recs = [r for r in doc.get("results", []) if r.get("kind") == kind]
+    return recs[-1] if recs else None
+
+
+def check_serve(baseline: dict, fresh: dict, *,
+                max_ratio_regression: float = 1.25,
+                min_speedup: float = 4.0) -> tuple[bool, list[str]]:
+    """Serve-suite gate; same contract as ``check``."""
+    msgs: list[str] = []
+    ok = True
+    b_sp, f_sp = _serve_rec(baseline, "speedup"), _serve_rec(fresh, "speedup")
+    if b_sp is None or f_sp is None:
+        raise ValueError("serve suite needs a 'speedup' record in both "
+                         "baseline and fresh output — regenerate with "
+                         "benchmarks.run --suite serve")
+    for k in ("m", "kappa", "d"):
+        if b_sp.get(k) != f_sp.get(k):
+            raise ValueError(
+                f"speedup config mismatch on {k}: baseline {b_sp.get(k)} != "
+                f"fresh {f_sp.get(k)} — regenerate the baseline instead of "
+                f"comparing different runs")
+    # the speedup is unbatched-vs-batched on ONE box, so (like the engine's
+    # mesh/sim wall ratio) the machine divides out of the comparison
+    regress = b_sp["speedup"] / max(f_sp["speedup"], 1e-12)
+    line = (f"micro-batch speedup: baseline {b_sp['speedup']:.1f}x, "
+            f"fresh {f_sp['speedup']:.1f}x (regression {regress:.2f}x)")
+    if regress > max_ratio_regression:
+        ok = False
+        msgs.append(f"FAIL {line} > {max_ratio_regression:.2f}x allowed")
+    elif f_sp["speedup"] < min_speedup:
+        ok = False
+        msgs.append(f"FAIL {line}; fresh speedup below the "
+                    f"{min_speedup:.0f}x serving bar")
+    else:
+        msgs.append(f"ok   {line}")
+
+    hot = _serve_rec(fresh, "hotswap")
+    if hot is None:
+        ok = False
+        msgs.append("FAIL fresh serve run has no hotswap record")
+    elif hot.get("failed", 1) or not hot.get("versions_monotonic", False):
+        ok = False
+        msgs.append(f"FAIL hot-swap under load: failed={hot.get('failed')} "
+                    f"monotonic={hot.get('versions_monotonic')}")
+    else:
+        msgs.append(
+            f"ok   hot-swap under load: 0 failed, served versions "
+            f"{hot['versions_served'][0]}..{hot['versions_served'][1]} "
+            f"monotonic (staleness_max={hot.get('staleness_max')})")
+    return ok, msgs
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_engine.json")
     ap.add_argument("--fresh", default="BENCH_engine.fresh.json")
     ap.add_argument("--max-ratio-regression", type=float, default=1.25,
-                    help="allowed mesh/sim wall-ratio growth (1.25 = +25%%)")
+                    help="allowed mesh/sim wall-ratio (engine) or batching-"
+                         "speedup (serve) regression (1.25 = +25%%)")
     ap.add_argument("--curve-rtol", type=float, default=1e-2)
+    ap.add_argument("--min-speedup", type=float, default=4.0,
+                    help="serve suite: absolute floor for the batched-over-"
+                         "unbatched lookup speedup")
     args = ap.parse_args(argv)
     try:
         with open(args.baseline) as fh:
@@ -122,10 +196,21 @@ def main(argv=None) -> int:
         # is a usage error, not a crash
         print(f"error: {e}", file=sys.stderr)
         return 2
+    suites = (baseline.get("suite", "engine"), fresh.get("suite", "engine"))
+    if suites[0] != suites[1]:
+        print(f"error: baseline suite {suites[0]!r} != fresh {suites[1]!r}",
+              file=sys.stderr)
+        return 2
     try:
-        ok, msgs = check(baseline, fresh,
-                         max_ratio_regression=args.max_ratio_regression,
-                         curve_rtol=args.curve_rtol)
+        if suites[0] == "serve":
+            ok, msgs = check_serve(
+                baseline, fresh,
+                max_ratio_regression=args.max_ratio_regression,
+                min_speedup=args.min_speedup)
+        else:
+            ok, msgs = check(baseline, fresh,
+                             max_ratio_regression=args.max_ratio_regression,
+                             curve_rtol=args.curve_rtol)
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2

@@ -4,12 +4,14 @@ benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
     PYTHONPATH=src python -m benchmarks.run --suite engine   # executor bench
     PYTHONPATH=src python -m benchmarks.run --suite elastic  # resize cost
+    PYTHONPATH=src python -m benchmarks.run --suite serve    # lookup service
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from repro.xla_flags import force_host_devices
@@ -299,6 +301,138 @@ def bench_elastic(*, quick: bool = False,
     return rows
 
 
+def bench_serve(*, quick: bool = False,
+                out_path: str = "BENCH_serve.json") -> list[str]:
+    """The serving subsystem: what do micro-batching and the sharded lookup
+    buy, and does a live hot-swap hold up?
+
+      * ``unbatched``  — the naive serving loop: one ``vq_assign`` dispatch
+        per single-vector query on ONE device (the pre-serving baseline).
+      * ``lookup_M*``  — batched sharded lookup, one bm=128 block per
+        device: rows/s at batch = M*128.  The headline ``speedup`` record
+        is batched rows/s at max M over the unbatched 1-device figure.
+      * ``service``    — the full micro-batching ``QuantizeService`` under
+        saturating open-loop load: q/s, p50/p99 (queue-inclusive).
+      * ``hotswap``    — a live ``ElasticMeshExecutor`` publishes codebooks
+        mid-load: zero failed requests + monotone served versions.
+
+    CPU wall numbers are a correctness/ratio harness, not TPU-indicative
+    (same caveat as ``bench_vq_kernel``); the gate in check_regression
+    compares the machine-normalized speedup, not absolute rows/s."""
+    import threading
+
+    from repro.data import synthetic
+    from repro.engine import ElasticMeshExecutor, InstantNetwork, ResizeSchedule
+    from repro.serve import (CodebookStore, QuantizeService, ShardedLookup,
+                             run_load)
+
+    d, kappa, bm = 32, 64, 128
+    key = jax.random.PRNGKey(0)
+    kw_, kz = jax.random.split(key)
+    w = jax.random.normal(kw_, (kappa, d))
+    rows_out, records = [], []
+
+    n_dev = len(jax.devices())
+    counts = sorted({1, n_dev} if quick else
+                    {m for m in (1, 2, 4, 8) if m <= n_dev})
+
+    # -- unbatched baseline: one dispatch per query on one device
+    look1 = ShardedLookup(n_devices=1)
+    n_single = 100 if quick else 400
+    zs = jax.random.normal(kz, (n_single, 1, d))
+    jax.block_until_ready(look1.assign(zs[0], w))  # compile
+    t0 = time.perf_counter()
+    for i in range(n_single):
+        jax.block_until_ready(look1.assign(zs[i], w))
+    wall = time.perf_counter() - t0
+    unbatched_rps = n_single / wall
+    rows_out.append(f"serve_unbatched_M1,{wall / n_single * 1e6:.0f},"
+                    f"rows_per_s={unbatched_rps:.0f}")
+    records.append({"kind": "unbatched", "m": 1, "kappa": kappa, "d": d,
+                    "rows_per_call": 1, "rows_per_s": unbatched_rps})
+
+    # -- batched sharded lookup: one bm block per device
+    batched_rps = {}
+    for m in counts:
+        look = ShardedLookup(n_devices=m)
+        batch = m * bm
+        z = jax.random.normal(kz, (batch, d))
+        us = _time_call(lambda: look.assign(z, w)[0], iters=20)
+        batched_rps[m] = batch / us * 1e6
+        rows_out.append(f"serve_lookup_M{m},{us:.0f},"
+                        f"batch={batch} rows_per_s={batched_rps[m]:.0f}"
+                        f" plan={look.plan(kappa, d)}")
+        records.append({"kind": "lookup", "m": m, "kappa": kappa, "d": d,
+                        "rows_per_call": batch, "us_per_call": us,
+                        "rows_per_s": batched_rps[m]})
+
+    m_max = max(counts)
+    speedup = batched_rps[m_max] / unbatched_rps
+    rows_out.append(f"serve_speedup,0,batched_M{m_max}_over_unbatched="
+                    f"{speedup:.1f}x (acceptance bar: >= 4x)")
+    records.append({"kind": "speedup", "m": m_max, "kappa": kappa, "d": d,
+                    "speedup": speedup})
+
+    # -- service level: micro-batcher + futures under saturating open load
+    store = CodebookStore(w)
+    n_req = 100 if quick else 400
+    with QuantizeService(store, ShardedLookup(n_devices=m_max),
+                         max_delay_s=2e-3) as service:
+        rep = run_load(service, n_requests=n_req, d=d, rows_per_request=16,
+                       network=InstantNetwork(), tick_s=0.0)
+    rows_out.append(f"serve_service_M{m_max},0,qps={rep.qps:.0f}"
+                    f" rows_per_s={rep.rows_per_s:.0f}"
+                    f" p50_ms={rep.p50_ms:.2f} p99_ms={rep.p99_ms:.2f}"
+                    f" fill={service.stats.mean_fill:.0f}")
+    records.append({"kind": "service", "m": m_max, "kappa": kappa, "d": d,
+                    "qps": rep.qps, "rows_per_s": rep.rows_per_s,
+                    "p50_ms": rep.p50_ms, "p99_ms": rep.p99_ms,
+                    "failed": rep.failed,
+                    "mean_fill": service.stats.mean_fill})
+
+    # -- hot swap under load: a live elastic trainer publishes mid-stream
+    m_train = min(8, n_dev)
+    n_pts = 200 if quick else 400
+    data = synthetic.replicate_stream(kz, m_train, n=n_pts, d=d)
+    w0 = synthetic.kmeanspp_init(kw_, data.reshape(-1, d), kappa)
+    store = CodebookStore(w0)
+    n_win = n_pts // 10
+    ex = ElasticMeshExecutor(
+        ResizeSchedule([(n_win // 2, max(1, m_train // 2)), (n_win, m_train)]),
+        network=InstantNetwork(), on_window=store.publisher(),
+        publish_every=2)
+    ex.run("delta", w0, data, data[:, :100], tau=10)  # compile warm-up
+    store = CodebookStore(w0)
+    ex.on_window = store.publisher()
+    with QuantizeService(store, ShardedLookup(n_devices=m_max),
+                         max_delay_s=1e-3) as service:
+        trainer = threading.Thread(target=lambda: ex.run(
+            "delta", w0, data, data[:, :100], tau=10))
+        trainer.start()
+        rep = run_load(service, n_requests=n_req, d=d, rows_per_request=4,
+                       network=InstantNetwork(), tick_s=1.5e-3)
+        trainer.join()
+    rows_out.append(
+        f"serve_hotswap,0,failed={rep.failed}"
+        f" versions={rep.versions_min}..{rep.versions_max}"
+        f" monotonic={rep.versions_monotonic}"
+        f" published={store.version} staleness_max={rep.staleness_max}")
+    records.append({"kind": "hotswap", "m": m_max, "kappa": kappa, "d": d,
+                    "failed": rep.failed,
+                    "versions_monotonic": rep.versions_monotonic,
+                    "versions_served": [rep.versions_min, rep.versions_max],
+                    "published": store.version,
+                    "staleness_max": rep.staleness_max})
+
+    with open(out_path, "w") as f:
+        json.dump({"suite": "serve", "devices": n_dev,
+                   "backend": jax.default_backend(),
+                   "results": records}, f, indent=1)
+    rows_out.append(f"serve_records,0,wrote {out_path} "
+                    f"({len(records)} records)")
+    return rows_out
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -310,19 +444,37 @@ BENCHES = {
     "decode": bench_decode_throughput,
     "engine": bench_engine,
     "elastic": bench_elastic,
+    "serve": bench_serve,
 }
 
 # named groups runnable as `--suite NAME`
 SUITES = {
     "engine": ["engine"],
     "elastic": ["elastic"],
+    "serve": ["serve"],
     "paper": ["fig1", "fig2", "fig3", "fig4"],
     "lm": ["throughput", "decode"],
 }
 
 # benches that take (quick, out_path) and write a JSON record
 _JSON_BENCHES = {"engine": "BENCH_engine.json",
-                 "elastic": "BENCH_elastic.json"}
+                 "elastic": "BENCH_elastic.json",
+                 "serve": "BENCH_serve.json"}
+
+
+def suite_out_path(out: str, name: str, *, multi: bool) -> str:
+    """Output path for one JSON suite under ``--out``.
+
+    With one JSON suite selected, ``--out`` is used verbatim.  With several,
+    each suite gets a derived sibling path — ``--out FRESH.json`` writes
+    ``FRESH.engine.json``, ``FRESH.elastic.json``, ... — instead of the old
+    behaviour of warning and ignoring ``--out`` entirely."""
+    if not out:
+        return _JSON_BENCHES[name]
+    if not multi:
+        return out
+    base, ext = os.path.splitext(out)
+    return f"{base}.{name}{ext or '.json'}"
 
 
 def main() -> None:
@@ -331,10 +483,13 @@ def main() -> None:
     ap.add_argument("--suite", choices=sorted(SUITES))
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="",
-                    help="JSON output path for the engine/elastic suites "
-                         "(default: the committed BENCH_<name>.json baseline "
-                         "path; CI writes a fresh file and diffs against the "
-                         "baseline with benchmarks.check_regression)")
+                    help="JSON output path for the engine/elastic/serve "
+                         "suites (default: the committed BENCH_<name>.json "
+                         "baseline path; CI writes a fresh file and diffs "
+                         "against the baseline with "
+                         "benchmarks.check_regression).  When several JSON "
+                         "suites are selected, each gets a derived sibling "
+                         "path: --out F.json -> F.engine.json, ...")
     args = ap.parse_args()
     if args.only:
         names = [args.only]
@@ -345,16 +500,19 @@ def main() -> None:
     if args.quick:
         names = [n for n in names if n not in ("fig4",)]
     json_names = [n for n in names if n in _JSON_BENCHES]
-    if args.out and len(json_names) > 1:
-        print(f"warning: --out covers one JSON suite but {json_names} are "
-              f"selected; ignoring --out (each writes its default path)")
-        args.out = ""
+    multi = len(json_names) > 1
+    if args.out and multi:
+        outs = {n: suite_out_path(args.out, n, multi=True)
+                for n in json_names}
+        print(f"note: --out covers {len(json_names)} JSON suites; writing "
+              + ", ".join(f"{n} -> {p}" for n, p in outs.items()))
     print("name,us_per_call,derived")
     for name in names:
         kwargs = {}
         if name in _JSON_BENCHES:
             kwargs = {"quick": args.quick,
-                      "out_path": args.out or _JSON_BENCHES[name]}
+                      "out_path": suite_out_path(args.out, name,
+                                                 multi=multi)}
         try:
             for row in BENCHES[name](**kwargs):
                 print(row)

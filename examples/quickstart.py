@@ -5,6 +5,11 @@ the wall-time distortion curves — Figures 1-3 of Durut, Patra & Rossi in one
 table.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Next stops: ``mesh_vq.py`` (the schemes on a real device mesh),
+``elastic_vq.py`` (resize the worker set mid-run), and ``serve_vq.py``
+(the serving side: a live training run hot-swaps the codebook under a
+micro-batched quantization service).
 """
 
 import jax

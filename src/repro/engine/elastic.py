@@ -158,7 +158,8 @@ class ElasticMeshExecutor:
                  axis: str = "workers", *, use_pallas: bool = True,
                  checkpointer=None, resume: bool = False,
                  late_policy: str = "merge", staleness_gamma: float = 0.5,
-                 resize_cost_ticks: int = 0):
+                 resize_cost_ticks: int = 0, on_window=None,
+                 publish_every: int = 1):
         if not isinstance(schedule, ResizeSchedule):
             schedule = ResizeSchedule(schedule)
         if late_policy not in ("merge", "drop"):
@@ -168,6 +169,9 @@ class ElasticMeshExecutor:
             raise ValueError(
                 "resume=True needs a checkpointer to restore from — "
                 "silently restarting from scratch is not a resume")
+        if publish_every < 1:
+            raise ValueError(f"publish_every must be >= 1, "
+                             f"got {publish_every}")
         self.schedule = schedule
         self.network = network or InstantNetwork()
         self.axis = axis
@@ -177,6 +181,11 @@ class ElasticMeshExecutor:
         self.late_policy = late_policy
         self.staleness_gamma = staleness_gamma
         self.resize_cost_ticks = resize_cost_ticks
+        # publication hook (see MeshExecutor.on_window): fires with the
+        # GLOBAL window index — continuous across resize events — so a
+        # CodebookStore sees one monotone stream over the whole elastic run
+        self.on_window = on_window
+        self.publish_every = publish_every
         # one MeshExecutor per worker count — each holds its plan_remesh-built
         # mesh and its own compiled-program cache
         self._mesh_ex: dict[int, MeshExecutor] = {}
@@ -277,7 +286,17 @@ class ElasticMeshExecutor:
                 seg = pool[cursor: cursor + seg_pts]
                 seg_data = seg.reshape(seg_w * tau, cur_m, d).transpose(1, 0, 2)
                 seg_eval = self._eval_streams(eval_pool, cur_m)
-                res = self._executor_for(cur_m, prev_m).run_segment(
+                mex = self._executor_for(cur_m, prev_m)
+                # assign unconditionally: the per-M executors are cached, so
+                # a previous run's publish adapter must not survive into a
+                # run with the hook cleared
+                mex.on_window = (
+                    None if self.on_window is None else
+                    # offset the segment-local window count to the global one
+                    lambda wi, w, _off=window_idx:
+                    self.on_window(_off + wi, w))
+                mex.publish_every = self.publish_every
+                res = mex.run_segment(
                     scheme, w_srd, seg_data, seg_eval, tau=tau, eps0=eps0,
                     decay=decay, t0=t0)
                 w_srd = res.w_shared

@@ -23,6 +23,8 @@ bit-for-bit the one a real 8-chip mesh runs.
 
 from __future__ import annotations
 
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -94,16 +96,29 @@ class MeshExecutor:
 
     def __init__(self, mesh: Mesh | None = None, axis: str = "workers",
                  network: NetworkModel | None = None, *,
-                 use_pallas: bool = True, eval_every: int = 10):
+                 use_pallas: bool = True, eval_every: int = 10,
+                 on_window: Callable[[int, jax.Array], None] | None = None,
+                 publish_every: int = 1):
         if not axis:
             raise ValueError("worker axis name must be a non-empty string")
         if mesh is not None:
             _validate_axis_names(mesh, axis)
+        if publish_every < 1:
+            raise ValueError(f"publish_every must be >= 1, "
+                             f"got {publish_every}")
         self.mesh = mesh
         self.axis = axis
         self.network = network or GeometricDelayNetwork()
         self.use_pallas = use_pallas
         self.eval_every = eval_every
+        # publication hook: when set, the sync schemes run in host-level
+        # chunks of ``publish_every`` windows (numerically identical — the
+        # window scan is sequential either way) and ``on_window(windows_done,
+        # w_shared)`` fires after each chunk's merge; a CodebookStore's
+        # ``publisher()`` plugs in here to hot-swap a live serving codebook.
+        # The async scheme has no window barrier: it publishes once, at end.
+        self.on_window = on_window
+        self.publish_every = publish_every
         # compiled-program cache: rebuilding the shard_map closure on every
         # run() would recompile each time; key = everything trace-affecting
         self._compiled: dict[tuple, object] = {}
@@ -125,8 +140,15 @@ class MeshExecutor:
             m, self.axis)
         _validate_mesh(mesh, self.axis, m)
         if scheme == "async_delta":
-            return self._run_async(mesh, w0, data, eval_data, tau=tau,
-                                   eps0=eps0, decay=decay, key=key)
+            res = self._run_async(mesh, w0, data, eval_data, tau=tau,
+                                  eps0=eps0, decay=decay, key=key)
+            if self.on_window is not None:
+                self.on_window(data.shape[1] // tau, res.w_shared)
+            return res
+        if self.on_window is not None:
+            return self._run_sync_published(mesh, scheme, w0, data,
+                                            eval_data, tau=tau, eps0=eps0,
+                                            decay=decay, t0=0)
         return self._run_sync(mesh, scheme, w0, data, eval_data, tau=tau,
                               eps0=eps0, decay=decay)
 
@@ -154,10 +176,44 @@ class MeshExecutor:
             mesh = self.mesh if self.mesh is not None else make_worker_mesh(
                 m, self.axis)
         _validate_mesh(mesh, self.axis, m)
+        if self.on_window is not None:
+            return self._run_sync_published(mesh, scheme, w0, data,
+                                            eval_data, tau=tau, eps0=eps0,
+                                            decay=decay, t0=t0)
         return self._run_sync(mesh, scheme, w0, data, eval_data, tau=tau,
                               eps0=eps0, decay=decay, t0=t0)
 
     # -- synchronous schemes (eqs. 3 and 8) ---------------------------------
+
+    def _run_sync_published(self, mesh: Mesh, scheme: str, w0, data,
+                            eval_data, *, tau: int, eps0: float, decay: float,
+                            t0: int) -> SchemeResult:
+        """``_run_sync`` in host-level chunks of ``publish_every`` windows,
+        firing ``on_window`` after each chunk — same numerics (the window
+        scan is sequential), at most two extra compiled programs (the chunk
+        shape and one remainder shape)."""
+        n_windows = data.shape[1] // tau
+        wt = self.network.window_ticks(tau)
+        w, t, done = w0, t0, 0
+        curves, ticks = [], []
+        while done < n_windows:
+            k = min(self.publish_every, n_windows - done)
+            seg = data[:, done * tau:(done + k) * tau]
+            res = self._run_sync(mesh, scheme, w, seg, eval_data, tau=tau,
+                                 eps0=eps0, decay=decay, t0=t)
+            w = res.w_shared
+            curves.append(np.asarray(res.distortion))
+            ticks.append(done * wt + np.asarray(res.wall_ticks))
+            done += k
+            t += k * tau
+            self.on_window(done, w)
+        if not curves:
+            raise ValueError(
+                f"need at least one tau={tau} window, got n={data.shape[1]}")
+        return SchemeResult(
+            w_shared=w,
+            wall_ticks=jnp.asarray(np.concatenate(ticks), jnp.int32),
+            distortion=jnp.asarray(np.concatenate(curves)))
 
     def _run_sync(self, mesh: Mesh, scheme: str, w0, data, eval_data, *,
                   tau: int, eps0: float, decay: float,

@@ -9,15 +9,54 @@ exposes the same signatures as the ``ref.py`` oracles.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import vq_assign as _k
 
+# Conservative per-core VMEM budget for kernel residency planning.  TPU cores
+# have ~16 MiB of VMEM (pallas guide §Memory Spaces); half of it is left for
+# double-buffered input blocks, scratch, and the compiler's own staging.
+DEFAULT_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def vmem_budget_bytes(budget_bytes: int | None = None) -> int:
+    """The VMEM budget used to route between kernels.
+
+    Explicit argument > ``REPRO_VMEM_BUDGET_BYTES`` env var > the default.
+    """
+    if budget_bytes is not None:
+        if budget_bytes <= 0:
+            raise ValueError(f"vmem budget must be > 0, got {budget_bytes}")
+        return budget_bytes
+    env = os.environ.get("REPRO_VMEM_BUDGET_BYTES", "")
+    return int(env) if env else DEFAULT_VMEM_BUDGET_BYTES
+
+
+def delta_vmem_bytes(kappa: int, d: int, *, bm: int = 128) -> int:
+    """f32 VMEM residency of the fused ``vq_delta`` kernel for one grid step:
+    codebook + zsum accumulator (both (kappa, d)), the counts column, one
+    (bm, d) batch block, and the (bm, kappa) distance/one-hot tiles."""
+    return 4 * (2 * kappa * d + kappa + bm * d + 2 * bm * kappa)
+
+
+def delta_fits_vmem(kappa: int, d: int, *, bm: int = 128,
+                    budget_bytes: int | None = None) -> bool:
+    """Can the full-codebook ``vq_delta`` kernel hold ``kappa*d`` in VMEM?"""
+    return delta_vmem_bytes(kappa, d, bm=bm) <= vmem_budget_bytes(budget_bytes)
+
+
+def codebook_fits_vmem(kappa: int, d: int, *,
+                       budget_bytes: int | None = None) -> bool:
+    """Does a replicated (kappa, d) f32 codebook fit one device's budget?
+    (The serving lookup shards kappa across devices when it does not.)"""
+    return 4 * kappa * d <= vmem_budget_bytes(budget_bytes)
 
 
 def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
@@ -65,6 +104,40 @@ def distortion(z: jax.Array, w: jax.Array, *, bm: int = 128,
     _, _, mind = _k.vq_delta_pallas(zp, w, bm=bm_, n_valid=batch,
                                     interpret=interpret)
     return jnp.sum(mind) / batch
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def _delta_via_assign(z: jax.Array, w: jax.Array, *, bm: int, bk: int,
+                      interpret: bool | None) -> tuple[jax.Array, jax.Array]:
+    """(counts, zsum) through the blocked assignment kernel + a segment sum.
+
+    The blocked ``vq_assign`` kernel streams the codebook in (bk, d) tiles, so
+    it works for ANY kappa*d; the scatter-add back to (kappa, d) happens in
+    XLA (HBM-resident accumulators) instead of the fused kernel's VMEM ones.
+    """
+    assign, _ = vq_assign(z, w, bm=bm, bk=bk, interpret=interpret)
+    kappa, d = w.shape
+    z32 = z.astype(jnp.float32)
+    counts = jnp.zeros((kappa,), jnp.float32).at[assign].add(1.0)
+    zsum = jnp.zeros((kappa, d), jnp.float32).at[assign].add(z32)
+    return counts, zsum
+
+
+def vq_delta_routed(z: jax.Array, w: jax.Array, *, bm: int = 128,
+                    bk: int = 128, budget_bytes: int | None = None,
+                    interpret: bool | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """``vq_delta`` with VMEM-aware routing (same contract as ``vq_delta``).
+
+    When the codebook fits the VMEM budget, the fused full-codebook kernel
+    runs; when ``kappa*d`` is too large, the blocked ``vq_assign`` kernel +
+    an XLA segment sum computes the identical (counts, zsum).
+    """
+    kappa, d = w.shape
+    if delta_fits_vmem(kappa, d, bm=min(bm, max(8, z.shape[0])),
+                       budget_bytes=budget_bytes):
+        return vq_delta(z, w, bm=bm, interpret=interpret)
+    return _delta_via_assign(z, w, bm=bm, bk=bk, interpret=interpret)
 
 
 def vq_minibatch_step(z: jax.Array, w: jax.Array, eps: jax.Array,

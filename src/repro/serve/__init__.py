@@ -1,0 +1,27 @@
+"""Online quantization serving — the engine's first read path.
+
+Training executors publish versioned codebooks into a hot-swappable
+``CodebookStore``; a ``QuantizeService`` micro-batches incoming
+nearest-prototype queries onto the sharded ``ShardedLookup`` engine (same
+``kernels/ops.vq_assign`` hot path as training); ``loadgen`` drives it with
+the engine's ``NetworkModel`` arrival processes and reports latency
+percentiles, throughput, and served-codebook staleness.
+
+    store   = CodebookStore(w0)
+    ex      = ElasticMeshExecutor(sched, on_window=store.publisher())
+    service = QuantizeService(store, ShardedLookup()).start()
+    resp    = service.quantize(z)          # rides a coalesced MXU batch
+"""
+
+from repro.serve.codebook_store import CodebookSnapshot, CodebookStore
+from repro.serve.loadgen import LoadReport, arrival_gaps_s, run_load
+from repro.serve.lookup import ShardedLookup
+from repro.serve.service import (QuantizeRequest, QuantizeResponse,
+                                 QuantizeService, ServiceStats)
+
+__all__ = [
+    "CodebookSnapshot", "CodebookStore",
+    "ShardedLookup",
+    "QuantizeRequest", "QuantizeResponse", "QuantizeService", "ServiceStats",
+    "LoadReport", "arrival_gaps_s", "run_load",
+]

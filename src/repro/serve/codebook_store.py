@@ -1,0 +1,119 @@
+"""Versioned, hot-swappable codebook store — the read side of the engine.
+
+CloudDALVQ's asynchronous architecture separates the write path (workers
+publishing displacement merges) from the read path (anyone downloading the
+current shared prototypes).  ``CodebookStore`` is that read/write seam for
+serving: training executors publish ``(version, w)`` snapshots at window
+boundaries (``MeshExecutor``/``ElasticMeshExecutor`` ``on_window`` hook),
+and lookup readers always see a *consistent* snapshot.
+
+Guarantees:
+
+  * **no torn reads** — a snapshot is an immutable ``CodebookSnapshot``
+    (read-only numpy codebook) swapped in atomically under a lock; a reader
+    holds a complete ``(version, w)`` pair or the previous one, never a mix;
+  * **strictly monotonic versions** — the store owns the version counter;
+    concurrent publishers serialize on the lock and each gets a fresh
+    version, so served versions can only move forward;
+  * **mesh-agnostic** — ``publish`` device_gets the array, so a codebook
+    computed on any device mesh (or a mesh that no longer exists, elastic
+    case) is servable from the host.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable, NamedTuple
+
+import jax
+import numpy as np
+
+
+class CodebookSnapshot(NamedTuple):
+    """One immutable published codebook."""
+
+    version: int          # store-assigned, strictly monotonic
+    w: np.ndarray         # (kappa, d) read-only prototypes
+    step: int             # publisher tag (training window index; -1 unknown)
+    published_at: float   # time.monotonic() at publish
+
+
+class CodebookStore:
+    """Thread-safe versioned codebook snapshots with atomic hot-swap."""
+
+    def __init__(self, w0: jax.Array | np.ndarray | None = None, *,
+                 keep: int = 16):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self._cond = threading.Condition()
+        self._latest: CodebookSnapshot | None = None
+        self._history: collections.OrderedDict[int, CodebookSnapshot] = (
+            collections.OrderedDict())
+        self._keep = keep
+        if w0 is not None:
+            self.publish(w0, step=0)
+
+    def publish(self, w: jax.Array | np.ndarray, *,
+                step: int = -1) -> CodebookSnapshot:
+        """Swap in a new codebook; returns its snapshot (fresh version)."""
+        # copy, don't alias: ascontiguousarray would return the CALLER'S
+        # array for a contiguous ndarray input, and the setflags below
+        # would freeze it under them
+        arr = np.array(jax.device_get(w))
+        if arr.ndim != 2:
+            raise ValueError(f"codebook must be (kappa, d), got {arr.shape}")
+        arr.setflags(write=False)
+        with self._cond:
+            version = (self._latest.version + 1) if self._latest else 1
+            snap = CodebookSnapshot(version=version, w=arr, step=step,
+                                    published_at=time.monotonic())
+            self._latest = snap
+            self._history[version] = snap
+            while len(self._history) > self._keep:
+                self._history.popitem(last=False)
+            self._cond.notify_all()
+        return snap
+
+    def latest(self) -> CodebookSnapshot:
+        """The current snapshot (atomic); raises if nothing was published."""
+        with self._cond:
+            if self._latest is None:
+                raise LookupError("no codebook published yet")
+            return self._latest
+
+    def get(self, version: int) -> CodebookSnapshot | None:
+        """A retained historical snapshot, or None if evicted/never existed."""
+        with self._cond:
+            return self._history.get(version)
+
+    @property
+    def version(self) -> int:
+        """Latest published version (0 = empty store)."""
+        with self._cond:
+            return self._latest.version if self._latest else 0
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._history)
+
+    def wait_for(self, version: int, timeout: float | None = None) -> bool:
+        """Block until ``self.version >= version``; False on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._latest is None or self._latest.version < version:
+                left = None if deadline is None else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    return False
+                self._cond.wait(left)
+            return True
+
+    def publisher(self) -> Callable[[int, jax.Array], None]:
+        """An ``on_window(window, w)`` callback that publishes into this
+        store — plug it into ``MeshExecutor``/``ElasticMeshExecutor``."""
+
+        def on_window(window: int, w: jax.Array) -> None:
+            self.publish(w, step=window)
+
+        return on_window

@@ -89,6 +89,43 @@ def test_block_size_invariance():
     np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-5)
 
 
+def test_vmem_budget_routing():
+    """The routing helper: explicit > env var > default; residency math."""
+    assert ops.vmem_budget_bytes() == ops.DEFAULT_VMEM_BUDGET_BYTES
+    assert ops.vmem_budget_bytes(1234) == 1234
+    with pytest.raises(ValueError):
+        ops.vmem_budget_bytes(0)
+    # a 16x8 codebook trivially fits; a huge one cannot
+    assert ops.delta_fits_vmem(16, 8)
+    assert not ops.delta_fits_vmem(1 << 20, 512)
+    assert ops.codebook_fits_vmem(16, 8)
+    assert not ops.codebook_fits_vmem(16, 8, budget_bytes=64)
+    # the fused kernel's residency grows with kappa*d
+    assert (ops.delta_vmem_bytes(1024, 64)
+            > ops.delta_vmem_bytes(128, 64))
+
+
+@pytest.mark.parametrize("batch,kappa,d", [(100, 200, 16), (64, 300, 8)])
+def test_vq_delta_routed_blocked_parity_kappa_gt_bk(batch, kappa, d):
+    """kappa > bk forces the blocked-assign + segment-sum fallback; it must
+    reproduce the fused kernel / oracle exactly (first step of the
+    larger-than-VMEM-codebooks roadmap item, scoped to the lookup path)."""
+    kz, kw = jax.random.split(jax.random.fold_in(KEY, batch * kappa))
+    z = jax.random.normal(kz, (batch, d))
+    w = jax.random.normal(kw, (kappa, d))
+    assert kappa > 128  # the bk block size: the codebook IS streamed
+    # tiny budget -> blocked path; default budget -> fused path
+    c_blk, s_blk = ops.vq_delta_routed(z, w, bk=128, budget_bytes=1024)
+    c_fus, s_fus = ops.vq_delta_routed(z, w)
+    assert not ops.delta_fits_vmem(kappa, d, budget_bytes=1024)
+    assert ops.delta_fits_vmem(kappa, d)
+    cr, sr = ref.vq_delta_ref(z, w)
+    for c, s in ((c_blk, s_blk), (c_fus, s_fus)):
+        np.testing.assert_allclose(np.asarray(c), np.asarray(cr), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                                   rtol=1e-4, atol=1e-4)
+
+
 def test_minibatch_step_reduces_distortion():
     from repro.data import synthetic
     data = synthetic.mixture_data(KEY, n=4096, d=16, n_centers=8)
