@@ -5,6 +5,7 @@
 #   make bench-engine  — full Sim-vs-Mesh executor benchmark -> BENCH_engine.json
 #   make bench-elastic — elastic resize-event cost benchmark -> BENCH_elastic.json
 #   make bench-serve   — serving suite (lookup/service/hot-swap) -> BENCH_serve.json
+#   make bench-comm    — scheme x transport wall + measured wire bytes -> BENCH_comm.json
 #   make serve-smoke   — quantization service end to end: live elastic trainer
 #                        hot-swapping codebooks under open-loop load
 #   make ci-local      — mirror the full CI matrix locally (lint, tier-1 under
@@ -20,7 +21,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
 
 .PHONY: test lint bench-smoke bench-engine bench-elastic bench-serve \
-        serve-smoke ci-local example-mesh example-elastic example-serve
+        bench-comm serve-smoke ci-local example-mesh example-elastic \
+        example-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -45,6 +47,9 @@ bench-elastic:
 bench-serve:
 	$(PY) -m benchmarks.run --suite serve
 
+bench-comm:
+	$(PY) -m benchmarks.run --suite comm --quick
+
 serve-smoke:
 	$(PY) -m repro.launch.serve --mode vq --smoke --train-publish
 
@@ -60,6 +65,9 @@ ci-local: lint
 	$(PY) -m benchmarks.run --suite serve --quick --out BENCH_serve.fresh.json
 	$(PY) -m benchmarks.check_regression \
 		--baseline BENCH_serve.json --fresh BENCH_serve.fresh.json
+	$(PY) -m benchmarks.run --suite comm --quick --out BENCH_comm.fresh.json
+	$(PY) -m benchmarks.check_regression \
+		--baseline BENCH_comm.json --fresh BENCH_comm.fresh.json
 	$(PY) -m benchmarks.run --suite elastic --quick --out BENCH_elastic.fresh.json
 
 example-mesh:

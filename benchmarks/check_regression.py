@@ -34,6 +34,18 @@ committed ``BENCH_serve.json`` and FAILS when:
   * the hot-swap leg failed any request or served non-monotonic codebook
     versions (functional, machine-independent).
 
+**comm**: diffs a fresh ``--suite comm --quick`` output against the
+committed ``BENCH_comm.json`` and FAILS when:
+
+  * any cell's measured merge wire bytes differ from the baseline (the
+    bytes are trace-exact shape arithmetic — drift means the accounting or
+    the schemes' collective structure changed); or
+  * the sparse-vs-dense wire reduction drops below ``--min-sparse-reduction``
+    (default 4x, the ISSUE-4 acceptance bar at k/kappa = 0.25); or
+  * the ring-vs-xla wall parity (same box, machine divides out) regresses
+    by more than ``--max-ratio-regression``; or any final distortion
+    diverges beyond ``--curve-rtol``.
+
 Exit codes: 0 pass, 1 regression, 2 usage/config mismatch (e.g. the fresh
 run used a different n/tau/d than the baseline — the comparison would be
 meaningless, so that is an error, not a pass).
@@ -174,6 +186,108 @@ def check_serve(baseline: dict, fresh: dict, *,
     return ok, msgs
 
 
+def _comm_cells(doc: dict) -> dict[tuple[str, str], dict]:
+    return {(r["scheme"], r["transport"]): r
+            for r in doc.get("results", []) if r.get("kind") == "cell"}
+
+
+def check_comm(baseline: dict, fresh: dict, *,
+               max_ratio_regression: float = 1.25,
+               min_sparse_reduction: float = 4.0,
+               curve_rtol: float = 1e-2) -> tuple[bool, list[str]]:
+    """Comm-suite gate; same contract as ``check``.
+
+    Wire bytes are trace-exact shape arithmetic, so they must match the
+    baseline EXACTLY — any drift means the accounting (or the schemes'
+    collective structure) changed, which is the thing this suite pins.
+    Wall gates ride ratios measured on one box (machine divides out):
+    ring-vs-xla parity and its regression vs the baseline ratio.
+    """
+    msgs: list[str] = []
+    ok = True
+    b_cells, f_cells = _comm_cells(baseline), _comm_cells(fresh)
+    missing = sorted(set(b_cells) - set(f_cells))
+    if missing:
+        # a vanished cell is lost coverage, not a pass: every baseline
+        # (scheme, transport) pin must still be produced by the fresh run
+        raise ValueError(
+            f"fresh comm run is missing baseline cells {missing} — the "
+            f"sweep lost coverage (regenerate the baseline only if the "
+            f"cell was removed on purpose)")
+    common = sorted(set(b_cells) & set(f_cells))
+    if not common:
+        raise ValueError("no (scheme, transport) cells shared between "
+                         "baseline and fresh comm output — regenerate with "
+                         "benchmarks.run --suite comm")
+    for key in common:
+        b, f = b_cells[key], f_cells[key]
+        cfg = ("m", "n", "d", "kappa", "tau", "sparse_frac")
+        if tuple(b.get(k) for k in cfg) != tuple(f.get(k) for k in cfg):
+            raise ValueError(
+                f"{key}: baseline config != fresh — regenerate the "
+                f"baseline (benchmarks.run --suite comm) instead of "
+                f"comparing different runs")
+        if b["merge_wire_bytes"] != f["merge_wire_bytes"]:
+            ok = False
+            msgs.append(
+                f"FAIL {key}: measured merge wire bytes drifted "
+                f"{b['merge_wire_bytes']} -> {f['merge_wire_bytes']} "
+                f"(accounting or collective structure changed)")
+        else:
+            msgs.append(f"ok   {key}: merge wire "
+                        f"{f['merge_wire_bytes']} B (exact)")
+        err = abs(f["final_C"] - b["final_C"]) / (abs(b["final_C"]) + 1e-12)
+        if err > curve_rtol:
+            ok = False
+            msgs.append(f"FAIL {key}: final distortion diverged "
+                        f"(rel err {err:.2e} > {curve_rtol:.0e})")
+
+    b_red = _serve_rec(baseline, "sparse_reduction")
+    f_red = _serve_rec(fresh, "sparse_reduction")
+    if f_red is None or b_red is None:
+        ok = False
+        msgs.append("FAIL comm suite needs a 'sparse_reduction' record in "
+                    "both baseline and fresh output")
+    elif f_red["reduction"] < min_sparse_reduction:
+        ok = False
+        msgs.append(f"FAIL sparse-vs-dense wire reduction "
+                    f"{f_red['reduction']:.2f}x below the "
+                    f"{min_sparse_reduction:.0f}x bar")
+    else:
+        msgs.append(f"ok   sparse-vs-dense wire reduction "
+                    f"{f_red['reduction']:.2f}x (bar "
+                    f"{min_sparse_reduction:.0f}x)")
+
+    b_par = _serve_rec(baseline, "ring_parity")
+    f_par = _serve_rec(fresh, "ring_parity")
+    if f_par is None or b_par is None:
+        ok = False
+        msgs.append("FAIL comm suite needs a 'ring_parity' record in both "
+                    "baseline and fresh output")
+    else:
+        # min regression over the scheme legs (same flap-proof statistic as
+        # the engine gate's min-over-M): on CPU ring == xla is the same
+        # program, so single legs jitter freely under load — a genuine ring
+        # slowdown slows EVERY scheme leg
+        schemes = sorted(set(b_par["parity"]) & set(f_par["parity"]))
+        if not schemes:
+            raise ValueError("ring_parity records share no scheme legs — "
+                             "regenerate the baseline")
+        regress = min(f_par["parity"][s] / max(b_par["parity"][s], 1e-12)
+                      for s in schemes)
+        med_b = float(np.median([b_par["parity"][s] for s in schemes]))
+        med_f = float(np.median([f_par["parity"][s] for s in schemes]))
+        line = (f"ring/xla wall parity over {schemes}: baseline median "
+                f"{med_b:.2f}x, fresh {med_f:.2f}x "
+                f"(min per-scheme regression {regress:.2f}x)")
+        if regress > max_ratio_regression:
+            ok = False
+            msgs.append(f"FAIL {line} > {max_ratio_regression:.2f}x allowed")
+        else:
+            msgs.append(f"ok   {line}")
+    return ok, msgs
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_engine.json")
@@ -185,6 +299,9 @@ def main(argv=None) -> int:
     ap.add_argument("--min-speedup", type=float, default=4.0,
                     help="serve suite: absolute floor for the batched-over-"
                          "unbatched lookup speedup")
+    ap.add_argument("--min-sparse-reduction", type=float, default=4.0,
+                    help="comm suite: floor for the sparse-vs-dense merge "
+                         "wire-byte reduction (4x at k/kappa = 0.25)")
     args = ap.parse_args(argv)
     try:
         with open(args.baseline) as fh:
@@ -207,6 +324,12 @@ def main(argv=None) -> int:
                 baseline, fresh,
                 max_ratio_regression=args.max_ratio_regression,
                 min_speedup=args.min_speedup)
+        elif suites[0] == "comm":
+            ok, msgs = check_comm(
+                baseline, fresh,
+                max_ratio_regression=args.max_ratio_regression,
+                min_sparse_reduction=args.min_sparse_reduction,
+                curve_rtol=args.curve_rtol)
         else:
             ok, msgs = check(baseline, fresh,
                              max_ratio_regression=args.max_ratio_regression,

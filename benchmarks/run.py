@@ -433,6 +433,68 @@ def bench_serve(*, quick: bool = False,
     return rows_out
 
 
+def bench_comm(*, quick: bool = False,
+               out_path: str = "BENCH_comm.json") -> list[str]:
+    """Scheme x transport through the comm layer: wall clock + MEASURED
+    merge wire bytes (from the transport's CommRecord stream) per cell.
+
+      * ``cell``            — one (scheme, transport) run: best-of-3 wall,
+        per-worker merge wire/logical bytes, final distortion.
+      * ``sparse_reduction``— min over displacement schemes of the dense
+        (xla) wire over the sparse wire at k/kappa = 0.25.  Machine-
+        independent (bytes are trace-exact); acceptance bar >= 4x.
+      * ``ring_parity``     — per-scheme ring/xla wall ratios.  On CPU
+        meshes the ring transport falls back to the XLA collectives, so
+        parity ~1 is the contract; on TPU this measures the Pallas ring
+        against the stock collective.  The gate takes the MINIMUM
+        regression over the scheme legs (engine-gate precedent: noise on
+        an oversubscribed host hits single legs, a real ring slowdown
+        hits all of them).
+
+    CPU wall numbers are a correctness/ratio harness, not TPU-indicative
+    (same caveat as ``bench_vq_kernel``).  The sweep itself lives in
+    ``repro.comm.sweep`` — one definition shared with ``launch/dryrun.py
+    --comm``, so the CI gate and the dry-run report cannot drift apart."""
+    from repro.comm import sweep
+
+    # best-of-3: single runs too noisy to gate
+    cells = sweep.run_comm_cells(n=(200 if quick else 400), repeats=3)
+    m, kappa, d = cells[0]["m"], cells[0]["kappa"], cells[0]["d"]
+    sparse_frac = next(c["sparse_frac"] for c in cells
+                       if c["transport"] == "sparse")
+    rows, records = [], []
+    for c in cells:
+        rows.append(
+            f"comm_{c['scheme']}_{c['transport']},{c['wall_s'] * 1e6:.0f},"
+            f"merge_wire_B={c['merge_wire_bytes']}"
+            f" logical_B={c['merge_logical_bytes']}"
+            f" final_C={c['final_C']:.5f}")
+        records.append({"kind": "cell", **{k: c[k] for k in (
+            "scheme", "transport", "m", "n", "d", "kappa", "tau",
+            "sparse_frac", "wall_s", "merge_wire_bytes",
+            "merge_logical_bytes", "final_C")}})
+
+    # compression applies to displacement merges ('average' ships means,
+    # dense on every transport), so the reduction is min'd over those
+    reduction = sweep.sparse_reduction(cells)
+    parity = sweep.ring_parity(cells)
+    rows.append(f"comm_sparse_reduction,0,xla_over_sparse_wire="
+                f"{reduction:.2f}x (bar: >= 4x at k/kappa = 0.25)")
+    rows.append("comm_ring_parity,0,ring_over_xla_wall="
+                + " ".join(f"{s}={p:.2f}x" for s, p in parity.items()))
+    records.append({"kind": "sparse_reduction", "m": m, "kappa": kappa,
+                    "d": d, "sparse_frac": sparse_frac,
+                    "reduction": reduction})
+    records.append({"kind": "ring_parity", "m": m, "parity": parity})
+
+    with open(out_path, "w") as f:
+        json.dump({"suite": "comm", "devices": len(jax.devices()),
+                   "backend": jax.default_backend(),
+                   "results": records}, f, indent=1)
+    rows.append(f"comm_records,0,wrote {out_path} ({len(records)} records)")
+    return rows
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -445,6 +507,7 @@ BENCHES = {
     "engine": bench_engine,
     "elastic": bench_elastic,
     "serve": bench_serve,
+    "comm": bench_comm,
 }
 
 # named groups runnable as `--suite NAME`
@@ -452,6 +515,7 @@ SUITES = {
     "engine": ["engine"],
     "elastic": ["elastic"],
     "serve": ["serve"],
+    "comm": ["comm"],
     "paper": ["fig1", "fig2", "fig3", "fig4"],
     "lm": ["throughput", "decode"],
 }
@@ -459,7 +523,8 @@ SUITES = {
 # benches that take (quick, out_path) and write a JSON record
 _JSON_BENCHES = {"engine": "BENCH_engine.json",
                  "elastic": "BENCH_elastic.json",
-                 "serve": "BENCH_serve.json"}
+                 "serve": "BENCH_serve.json",
+                 "comm": "BENCH_comm.json"}
 
 
 def suite_out_path(out: str, name: str, *, multi: bool) -> str:

@@ -1,0 +1,31 @@
+"""Pluggable communication layer — merge transports + wire-byte accounting.
+
+One ``Transport`` protocol (``comm.api``), three implementations:
+
+  * ``XlaTransport``    (``comm.xla``)    — stock XLA f32 collectives; the
+    default and the numerics oracle every other transport is tested against.
+  * ``RingTransport``   (``comm.ring``)   — Pallas ring all-reduce built on
+    ``make_async_remote_copy`` neighbor hops (TPU); XLA fallback elsewhere.
+  * ``SparseTransport`` (``comm.sparse``) — top-k + error-feedback
+    compressed sums (the LM DELTA_SPARSE protocol as an engine-level
+    citizen).
+
+Every collective the engine/training layers issue goes through a
+transport, which appends a ``CommRecord`` (logical + wire bytes, per
+participant, per call) to its ``CommLog`` — so dry-runs and benches report
+bytes that were measured from the program, not modeled.
+"""
+
+from repro.comm.api import (CommLog, CommRecord, Transport, axis_size,
+                            get_transport, ring_wire_bytes, tree_f32_bytes)
+from repro.comm.ring import RingTransport, ring_all_reduce
+from repro.comm.sparse import (SparseTransport, sparse_allsum, topk_count,
+                               topk_threshold_mask)
+from repro.comm.xla import XlaTransport
+
+__all__ = [
+    "CommLog", "CommRecord", "Transport", "axis_size", "get_transport",
+    "ring_wire_bytes", "tree_f32_bytes",
+    "XlaTransport", "RingTransport", "SparseTransport",
+    "ring_all_reduce", "sparse_allsum", "topk_count", "topk_threshold_mask",
+]

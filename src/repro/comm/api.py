@@ -1,0 +1,213 @@
+"""The ``Transport`` protocol — one API over every way to move a merge.
+
+The paper's whole argument is that the *communication pattern* of the
+reducing phase decides whether a distributed VQ scheme beats the sequential
+one; this module makes that pattern a pluggable object instead of a
+hardcoded collective.  A transport answers two calls, both pytree-in /
+pytree-out and both legal inside a shard_map body:
+
+  * ``all_reduce(tree, axis, op='sum'|'mean')``  — the barriered reducing
+    phase (paper eqs. 3 and 8).  ``op='sum'`` rides in f32 and returns f32
+    leaves (displacement merging); ``op='mean'`` casts floating leaves back
+    to their input dtype and passes non-floating leaves through untouched.
+    This is THE f32-cast convention for merge traffic (XLA:CPU's bf16
+    all-reduce promotion CHECK-fails, and f32 reductions are what real runs
+    use) — call sites must not re-implement it.
+  * ``masked_all_reduce(tree, mask, axis)`` — the barrier-free reducer of
+    the paper's cloud scheme (eq. 9): only workers whose ``mask`` is
+    non-zero contribute their in-flight delta this tick.
+
+Both return ``(result, state)``: stateful transports (``SparseTransport``
+carries an error-feedback residual) thread ``state`` through scan carries
+exactly like a stateful ``MergeStrategy`` does.
+
+Wire-byte accounting
+--------------------
+
+Every call appends a ``CommRecord`` to the transport's ``CommLog`` **at
+trace time** (shapes are static, so the bytes are exact).  Executors
+snapshot the records traced for each compiled program and replay them on
+cache hits, so the log reflects what actually ran, not what a cost model
+guessed.  Conventions, per participant and per call:
+
+  * ``logical_bytes`` — the dense f32 payload a merge logically moves
+    (``4 * leaf.size`` summed over reduced leaves).
+  * ``wire_bytes``    — what this transport actually puts on the wire.
+    Dense transports charge the bandwidth-optimal ring all-reduce cost
+    ``2 * (m-1)/m * logical``; the sparse transport charges the ring
+    all-gather of its top-k (value f32 + index int32) chunks,
+    ``(m-1) * k * 8``.  A 1-participant axis moves nothing.
+
+``tag`` separates merge traffic ("merge") from instrumentation ("eval" —
+the distortion-curve pmean) and host-side resharding transfers
+("late_delta"), so dry-runs and benches can compare merge wire bytes
+without the diagnostics polluting the ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis, usable inside a traced body.
+
+    ``lax.psum`` of a non-tracer constant folds to ``size * x`` without
+    emitting a collective, so this is free and exact at trace time.
+    """
+    try:
+        return int(jax.lax.psum(1, axis))
+    except Exception:  # noqa: BLE001 — unbound axis (unit tests off-mesh)
+        return 1
+
+
+def tree_f32_bytes(tree: Pytree, *, floating_only: bool = False) -> int:
+    """Dense f32 payload bytes of a pytree (the ``logical_bytes`` unit)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if floating_only and not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        total += 4 * int(leaf.size)
+    return total
+
+
+def ring_wire_bytes(logical_bytes: int, m: int) -> int:
+    """Per-participant wire bytes of a bandwidth-optimal ring all-reduce
+    (reduce-scatter + all-gather): ``2 * (m-1)/m * logical``."""
+    if m <= 1:
+        return 0
+    return int(2 * (m - 1) * logical_bytes // m)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRecord:
+    """One collective call site: what it moved, per participant, per call.
+
+    ``calls`` folds in the static trip count of the surrounding scan (a
+    merge traced once inside a window scan executes ``n_windows`` times),
+    so ``wire_bytes * calls`` is the total a participant put on the wire.
+    """
+
+    op: str                # 'sum' | 'mean' | 'masked_sum' | 'host'
+    transport: str
+    axis: str
+    participants: int
+    logical_bytes: int     # dense f32 payload per participant per call
+    wire_bytes: int        # bytes per participant per call on the wire
+    calls: int = 1
+    tag: str = "merge"     # 'merge' | 'eval' | 'late_delta'
+
+
+class CommLog:
+    """Bounded stream of ``CommRecord``s with mark/since windows.
+
+    Long-lived executors (a serve loop's train-publish trainer) append and
+    replay records on every run forever, so the log keeps only the newest
+    ``max_records`` and drops the oldest — marks are ABSOLUTE indices, so
+    ``since`` stays correct across trims (records that fell off the window
+    are simply gone from old summaries, never misattributed)."""
+
+    def __init__(self, max_records: int = 1 << 16):
+        if max_records < 1:
+            raise ValueError(f"max_records must be >= 1, got {max_records}")
+        self.max_records = max_records
+        self.records: list[CommRecord] = []
+        self._dropped = 0      # records trimmed off the front, ever
+
+    def _trim(self) -> None:
+        excess = len(self.records) - self.max_records
+        if excess > 0:
+            del self.records[:excess]
+            self._dropped += excess
+
+    def append(self, rec: CommRecord) -> None:
+        self.records.append(rec)
+        self._trim()
+
+    def extend(self, recs) -> None:
+        self.records.extend(recs)
+        self._trim()
+
+    def mark(self) -> int:
+        return self._dropped + len(self.records)
+
+    def since(self, mark: int) -> list[CommRecord]:
+        return list(self.records[max(0, mark - self._dropped):])
+
+    def clear(self) -> None:
+        self._dropped += len(self.records)
+        self.records.clear()
+
+    @staticmethod
+    def summarize(records) -> dict:
+        """Totals (``wire/logical bytes * calls``) overall and per tag."""
+        out: dict = {"calls": 0, "logical_bytes": 0, "wire_bytes": 0,
+                     "by_tag": {}}
+        for r in records:
+            out["calls"] += r.calls
+            out["logical_bytes"] += r.logical_bytes * r.calls
+            out["wire_bytes"] += r.wire_bytes * r.calls
+            t = out["by_tag"].setdefault(
+                r.tag, {"calls": 0, "logical_bytes": 0, "wire_bytes": 0})
+            t["calls"] += r.calls
+            t["logical_bytes"] += r.logical_bytes * r.calls
+            t["wire_bytes"] += r.wire_bytes * r.calls
+        return out
+
+
+class Transport:
+    """Base transport.  Stateful transports must be fed ``init_state``."""
+
+    name = "base"
+    stateful = False
+
+    def __init__(self):
+        self.log = CommLog()
+
+    def init_state(self, tree: Pytree) -> Pytree | None:
+        return None
+
+    def all_reduce(self, tree: Pytree, axis: str, *, op: str = "sum",
+                   state: Pytree | None = None, calls: int = 1,
+                   tag: str = "merge") -> tuple[Pytree, Pytree | None]:
+        raise NotImplementedError
+
+    def masked_all_reduce(self, tree: Pytree, mask: jax.Array, axis: str, *,
+                          state: Pytree | None = None, calls: int = 1,
+                          tag: str = "merge") -> tuple[Pytree, Pytree | None]:
+        raise NotImplementedError
+
+    def record_host_transfer(self, *, logical_bytes: int, wire_bytes: int,
+                             participants: int, axis: str, calls: int = 1,
+                             tag: str = "late_delta") -> None:
+        """Account a host-side transfer that bypasses the collectives (an
+        elastic resize moving departing workers' late deltas)."""
+        self.log.append(CommRecord(
+            op="host", transport=self.name, axis=axis,
+            participants=participants, logical_bytes=logical_bytes,
+            wire_bytes=wire_bytes, calls=calls, tag=tag))
+
+
+def get_transport(name, **kwargs) -> Transport:
+    """Factory: 'xla' | 'ring' | 'sparse' (+ transport kwargs).
+
+    An already-constructed ``Transport`` passes through unchanged, so call
+    sites can accept either spelling.
+    """
+    if isinstance(name, Transport):
+        return name
+    from repro.comm.ring import RingTransport
+    from repro.comm.sparse import SparseTransport
+    from repro.comm.xla import XlaTransport
+    transports = {"xla": XlaTransport, "ring": RingTransport,
+                  "sparse": SparseTransport}
+    if name not in transports:
+        raise ValueError(
+            f"unknown transport {name!r}; choose from {sorted(transports)}")
+    return transports[name](**kwargs)

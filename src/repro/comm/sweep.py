@@ -1,0 +1,96 @@
+"""One scheme x transport sweep, shared by the dry-run and the bench gate.
+
+``launch/dryrun.py --comm`` and ``benchmarks/run.py --suite comm`` report
+the same quantity — the MEASURED per-worker merge wire bytes of each
+(scheme, transport) cell — so the sweep (workload construction, transport
+configuration, the k/kappa = 0.25 acceptance frac) is defined exactly once
+here; the two callers only shape the output differently.
+
+Imports of the engine are lazy: ``repro.engine`` imports ``repro.comm`` at
+module load, so the dependency must not run both ways at import time.
+"""
+
+from __future__ import annotations
+
+import time
+
+SCHEMES = ("average", "delta", "async_delta")
+TRANSPORTS = ("xla", "ring", "sparse")
+
+
+def acceptance_sparse_frac(kappa: int, d: int) -> float:
+    """The ISSUE-4 acceptance point, k/kappa = 0.25: keep k = kappa/4
+    entries of the (kappa, d) displacement, i.e. frac = (kappa/4)/(kappa*d)
+    of the flattened leaf — where sparse wire must be >= 4x under dense."""
+    return (kappa // 4) / (kappa * d)
+
+
+def run_comm_cells(*, m: int = 8, n: int = 240, d: int = 8, kappa: int = 16,
+                   tau: int = 10, sparse_frac: float | None = None,
+                   repeats: int = 1, seed: int = 0) -> list[dict]:
+    """Run every scheme x transport cell; returns one dict per cell with
+    the shared config, the best-of-``repeats`` wall seconds (first run
+    compiles and is excluded), and the measured merge wire/logical bytes
+    from the executor's ``last_comm`` record stream."""
+    import jax
+
+    from repro import comm
+    from repro.data import synthetic
+    from repro.engine import InstantNetwork, MeshExecutor
+
+    m = min(m, len(jax.devices()))
+    if sparse_frac is None:
+        sparse_frac = acceptance_sparse_frac(kappa, d)
+    key = jax.random.PRNGKey(seed)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, : min(200, n)]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+
+    cells: list[dict] = []
+    for tname in TRANSPORTS:
+        kwargs = {"frac": sparse_frac} if tname == "sparse" else {}
+        for scheme in SCHEMES:
+            ex = MeshExecutor(network=InstantNetwork(),
+                              transport=comm.get_transport(tname, **kwargs))
+            t0 = time.time()
+            res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
+            jax.block_until_ready(res.w_shared)   # compile + first run
+            compile_s = time.time() - t0
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
+                jax.block_until_ready(res.w_shared)
+                best = min(best, time.perf_counter() - t0)
+            merge = ex.last_comm["by_tag"].get(
+                "merge", {"wire_bytes": 0, "logical_bytes": 0, "calls": 0})
+            cells.append({
+                "scheme": scheme, "transport": tname,
+                "m": m, "n": n, "d": d, "kappa": kappa, "tau": tau,
+                "sparse_frac": sparse_frac if tname == "sparse" else None,
+                "compile_s": round(compile_s, 1),
+                "wall_s": best if repeats else compile_s,
+                "merge_wire_bytes": merge["wire_bytes"],
+                "merge_logical_bytes": merge["logical_bytes"],
+                "collective_calls": ex.last_comm["calls"],
+                "final_C": float(res.distortion[-1]),
+            })
+    return cells
+
+
+def sparse_reduction(cells: list[dict]) -> float:
+    """Min over displacement schemes of dense (xla) wire over sparse wire
+    ('average' ships means, which ride dense on every transport)."""
+    wire = {(c["scheme"], c["transport"]): c["merge_wire_bytes"]
+            for c in cells}
+    return min(wire[(s, "xla")] / max(wire[(s, "sparse")], 1)
+               for s in SCHEMES if s != "average")
+
+
+def ring_parity(cells: list[dict]) -> dict[str, float]:
+    """Per-scheme ring/xla wall ratios (gate takes min regression over
+    schemes — noise hits single legs, a real ring slowdown hits all)."""
+    wall = {(c["scheme"], c["transport"]): c["wall_s"] for c in cells}
+    return {s: wall[(s, "ring")] / max(wall[(s, "xla")], 1e-12)
+            for s in SCHEMES}

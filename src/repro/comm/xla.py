@@ -1,0 +1,63 @@
+"""``XlaTransport`` — the stock XLA collectives, and the numerics oracle.
+
+This is today's behavior extracted behind the ``Transport`` API: f32 psum
+for sums (the displacement merges of paper eqs. 8-9), f32 pmean cast back
+to the input dtype for means (eq. 3 averaging, optimizer-moment consensus),
+and the masked psum of the eq.-9 barrier-free reducer.  Every other
+transport is tested against this one.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.api import (CommRecord, Pytree, Transport, axis_size,
+                            ring_wire_bytes, tree_f32_bytes)
+
+
+class XlaTransport(Transport):
+    """Dense f32 collectives through XLA's all-reduce (the default)."""
+
+    name = "xla"
+
+    # the single psum/pmean hooks subclasses (RingTransport) override; the
+    # f32-cast convention lives HERE, not at call sites
+    def _sum_leaf(self, x: jax.Array, axis: str) -> jax.Array:
+        return jax.lax.psum(x.astype(jnp.float32), axis)
+
+    def _mean_leaf(self, x: jax.Array, axis: str) -> jax.Array:
+        return jax.lax.pmean(x.astype(jnp.float32), axis).astype(x.dtype)
+
+    def _record(self, op: str, axis: str, logical: int, *, calls: int,
+                tag: str) -> None:
+        m = axis_size(axis)
+        self.log.append(CommRecord(
+            op=op, transport=self.name, axis=axis, participants=m,
+            logical_bytes=logical, wire_bytes=ring_wire_bytes(logical, m),
+            calls=calls, tag=tag))
+
+    def all_reduce(self, tree: Pytree, axis: str, *, op: str = "sum",
+                   state: Pytree | None = None, calls: int = 1,
+                   tag: str = "merge") -> tuple[Pytree, Pytree | None]:
+        if op == "sum":
+            self._record("sum", axis, tree_f32_bytes(tree), calls=calls,
+                         tag=tag)
+            return jax.tree.map(
+                lambda x: self._sum_leaf(x, axis), tree), state
+        if op == "mean":
+            self._record("mean", axis,
+                         tree_f32_bytes(tree, floating_only=True),
+                         calls=calls, tag=tag)
+            return jax.tree.map(
+                lambda x: self._mean_leaf(x, axis)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, tree), state
+        raise ValueError(f"unknown reduce op {op!r}; choose 'sum' or 'mean'")
+
+    def masked_all_reduce(self, tree: Pytree, mask: jax.Array, axis: str, *,
+                          state: Pytree | None = None, calls: int = 1,
+                          tag: str = "merge") -> tuple[Pytree, Pytree | None]:
+        self._record("masked_sum", axis, tree_f32_bytes(tree), calls=calls,
+                     tag=tag)
+        return jax.tree.map(
+            lambda x: self._sum_leaf(mask * x, axis), tree), state

@@ -10,16 +10,19 @@ One ``Executor`` API (``engine.api``), three interchangeable backends:
     reshard -> resume) without restarting the run (engine.elastic).
 
 plus the pluggable pieces: ``NetworkModel`` (engine.network — instant /
-fixed-latency / geometric-delay communication cost) and ``MergeStrategy``
-(engine.merge — the reducing phases as pytree collectives, shared with the
-LM window step in training.steps).
+fixed-latency / geometric-delay communication cost), ``MergeStrategy``
+(engine.merge — the reducing phases as pytree ops, shared with the LM
+window step in training.steps) and ``Transport`` (repro.comm — how a
+merge's bytes actually move: dense XLA, Pallas ring, or top-k sparse,
+with per-call wire-byte accounting).
 """
 
+from repro.comm import Transport, get_transport
 from repro.engine.api import SCHEMES, Executor, get_executor
 from repro.engine.elastic import (ElasticMeshExecutor, ResizeEvent,
                                   ResizeSchedule)
 from repro.engine.merge import (AsyncDeltaMerge, AverageMerge, DeltaMerge,
-                                MergeStrategy, get_merge)
+                                MergeStrategy, SparseDeltaMerge, get_merge)
 from repro.engine.mesh import MeshExecutor, make_worker_mesh
 from repro.engine.network import (FixedLatencyNetwork, GeometricDelayNetwork,
                                   InstantNetwork, NetworkModel, get_network)
@@ -28,8 +31,9 @@ from repro.engine.threads import ThreadExecutor
 
 __all__ = [
     "SCHEMES", "Executor", "get_executor",
+    "Transport", "get_transport",
     "MergeStrategy", "AverageMerge", "DeltaMerge", "AsyncDeltaMerge",
-    "get_merge",
+    "SparseDeltaMerge", "get_merge",
     "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",
     "GeometricDelayNetwork", "get_network",
     "SimExecutor", "MeshExecutor", "ThreadExecutor", "make_worker_mesh",

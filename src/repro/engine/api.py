@@ -53,7 +53,12 @@ def get_executor(name: str, **kwargs) -> Executor:
     """Factory: 'sim' | 'mesh' | 'thread' | 'elastic' (+ backend kwargs).
 
     'elastic' requires a ``schedule=`` kwarg (a ``ResizeSchedule``, a list of
-    ``(window, new_m)`` pairs, or a ``"WINDOW:M,..."`` spec string)."""
+    ``(window, new_m)`` pairs, or a ``"WINDOW:M,..."`` spec string).
+
+    'mesh' and 'elastic' additionally accept ``transport=`` — a
+    ``repro.comm`` transport name ('xla' | 'ring' | 'sparse') or instance —
+    selecting how the reducing phases move their bytes; the executor's
+    ``last_comm`` then reports the measured wire bytes of each run."""
     if name == "sim":
         from repro.engine.sim import SimExecutor
         return SimExecutor(**kwargs)

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm
 from repro.core import vq
 from repro.core.schemes import SchemeResult
 from repro.distributed import elastic as elastic_lib
@@ -156,6 +157,7 @@ class ElasticMeshExecutor:
 
     def __init__(self, schedule, network: NetworkModel | None = None,
                  axis: str = "workers", *, use_pallas: bool = True,
+                 transport: comm.Transport | str | None = None,
                  checkpointer=None, resume: bool = False,
                  late_policy: str = "merge", staleness_gamma: float = 0.5,
                  resize_cost_ticks: int = 0, on_window=None,
@@ -176,6 +178,11 @@ class ElasticMeshExecutor:
         self.network = network or InstantNetwork()
         self.axis = axis
         self.use_pallas = use_pallas
+        # ONE transport shared by every per-M segment executor, so the whole
+        # elastic run streams into a single CommLog (segments + late deltas)
+        self.transport = comm.get_transport(
+            transport if transport is not None else "xla")
+        self.last_comm: dict | None = None
         self.checkpointer = checkpointer
         self.resume = resume
         self.late_policy = late_policy
@@ -200,7 +207,7 @@ class ElasticMeshExecutor:
             mesh = make_worker_mesh(plan.data * plan.model, self.axis)
             self._mesh_ex[m] = MeshExecutor(
                 mesh=mesh, axis=self.axis, network=self.network,
-                use_pallas=self.use_pallas)
+                transport=self.transport, use_pallas=self.use_pallas)
         return self._mesh_ex[m]
 
     @staticmethod
@@ -252,6 +259,7 @@ class ElasticMeshExecutor:
         cur_m, _ = self._clamp_m(m0)
         w_srd, t0, cursor, window_idx, tick_offset = w0, 0, 0, 0, 0
         self.resize_events = []
+        comm_mark = self.transport.log.mark()
 
         resumed = False
         if self.resume:
@@ -316,6 +324,8 @@ class ElasticMeshExecutor:
                 tau=tau, eps0=eps0, decay=decay)
             tick_offset += self.resize_cost_ticks
 
+        self.last_comm = comm.CommLog.summarize(
+            self.transport.log.since(comm_mark))
         if not curves:
             if resumed:
                 # the checkpoint captured an already-complete run: nothing
@@ -375,6 +385,13 @@ class ElasticMeshExecutor:
                 w_srd = elastic_lib.merge_late_delta(
                     w_srd, jnp.sum(deltas, axis=0), delay_windows=1,
                     gamma=self.staleness_gamma)
+                # the departing workers' deltas ride the same accounting
+                # stream as the collectives: each uploads one (kappa, d)
+                # f32 displacement to the survivors, host-side
+                self.transport.record_host_transfer(
+                    logical_bytes=4 * int(w_srd.size),
+                    wire_bytes=4 * int(w_srd.size),
+                    participants=n_dep, axis=self.axis, tag="late_delta")
             else:
                 late_skipped = True  # pool too dry; recorded, not silent
         # rebuild the mesh for the survivors (cached per M)

@@ -8,12 +8,20 @@ One implementation serves both consumers:
     parameter pytrees, so the paper-scheme window step and the VQ engine
     share one merge implementation.
 
-All collectives ride in f32: XLA:CPU's bf16 all-reduce promotion
-CHECK-fails, and f32 reductions are what real runs use for merge traffic.
+The collectives themselves live one layer down, behind ``repro.comm``'s
+``Transport`` API: a strategy decides *what* to reduce (means of versions,
+sums of displacements, last window's stale deltas), the transport decides
+*how* the bytes move (dense XLA, Pallas ring, top-k sparse) and accounts
+the wire.  The f32 merge-traffic convention is the transport's, defined
+once in ``comm.api``.
+
 A strategy is ``(merged, new_state) = strategy(w0, w_local, axis, state)``
 where ``w0`` is the window's starting version, ``w_local`` the worker's
 version after tau local steps, and ``axis`` the mesh axis to reduce over.
-Only ``AsyncDeltaMerge`` is stateful (it carries last window's delta).
+``state`` threads both strategy-owned state (``AsyncDeltaMerge`` carries
+last window's delta) and transport state (``SparseTransport`` carries the
+error-feedback residual); with the default stateless transport the async
+state stays the bare delta tree it has always been.
 """
 
 from __future__ import annotations
@@ -22,6 +30,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro import comm
 
 Pytree = Any
 
@@ -32,18 +42,6 @@ def tree_sub_f32(a: Pytree, b: Pytree) -> Pytree:
         lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
 
 
-def tree_pmean_f32(tree: Pytree, axis: str) -> Pytree:
-    """pmean floating leaves in f32, cast back; non-floating pass through."""
-    return jax.tree.map(
-        lambda x: jax.lax.pmean(x.astype(jnp.float32), axis).astype(x.dtype)
-        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
-
-
-def tree_psum_f32(tree: Pytree, axis: str) -> Pytree:
-    return jax.tree.map(
-        lambda x: jax.lax.psum(x.astype(jnp.float32), axis), tree)
-
-
 def tree_apply_delta(base: Pytree, delta: Pytree) -> Pytree:
     """``base - delta`` with the subtraction in f32, result in base dtype."""
     return jax.tree.map(
@@ -51,16 +49,56 @@ def tree_apply_delta(base: Pytree, delta: Pytree) -> Pytree:
 
 
 class MergeStrategy:
-    """Base strategy.  ``stateful`` strategies must be fed ``init_state``."""
+    """Base strategy.  ``stateful`` strategies must be fed ``init_state``.
+
+    ``transport`` is any ``repro.comm.Transport`` (default: the dense XLA
+    oracle); ``calls`` at call time is the static trip count of the
+    surrounding scan, folded into the transport's wire accounting.
+    """
 
     name = "base"
-    stateful = False
+    own_state = False  # strategy-owned state, beyond the transport's
 
-    def init_state(self, params: Pytree) -> Pytree | None:
+    def __init__(self, transport: comm.Transport | None = None):
+        self.transport = (transport if transport is not None
+                          else comm.get_transport("xla"))
+
+    @property
+    def stateful(self) -> bool:
+        return self.own_state or self.transport.stateful
+
+    # -- state threading: strategy-owned + transport state in one carry ----
+
+    def _init_own_state(self, params: Pytree) -> Pytree | None:
         return None
 
+    def init_state(self, params: Pytree) -> Pytree | None:
+        own = self._init_own_state(params)
+        tsp = self.transport.init_state(params)
+        if own is None:
+            return tsp
+        if tsp is None:
+            return own
+        return {"own": own, "comm": tsp}
+
+    def _split_state(self, state):
+        if self.own_state and self.transport.stateful:
+            state = {} if state is None else state
+            return state.get("own"), state.get("comm")
+        if self.own_state:
+            return state, None
+        return None, state
+
+    def _join_state(self, own, tsp):
+        if self.own_state and self.transport.stateful:
+            return {"own": own, "comm": tsp}
+        if self.own_state:
+            return own
+        return tsp
+
     def __call__(self, w0: Pytree, w_local: Pytree, axis: str,
-                 state: Pytree | None = None) -> tuple[Pytree, Pytree | None]:
+                 state: Pytree | None = None, *,
+                 calls: int = 1) -> tuple[Pytree, Pytree | None]:
         raise NotImplementedError
 
 
@@ -70,9 +108,12 @@ class AverageMerge(MergeStrategy):
 
     name = "average"
 
-    def __call__(self, w0, w_local, axis, state=None):
+    def __call__(self, w0, w_local, axis, state=None, *, calls=1):
         del w0
-        return tree_pmean_f32(w_local, axis), state
+        merged, _ = self.transport.all_reduce(w_local, axis, op="mean",
+                                              calls=calls)
+        # means ride dense on every transport: state passes through
+        return merged, state
 
 
 class DeltaMerge(MergeStrategy):
@@ -80,9 +121,32 @@ class DeltaMerge(MergeStrategy):
 
     name = "delta"
 
-    def __call__(self, w0, w_local, axis, state=None):
-        total = tree_psum_f32(tree_sub_f32(w0, w_local), axis)
+    def __call__(self, w0, w_local, axis, state=None, *, calls=1):
+        total, state = self.transport.all_reduce(
+            tree_sub_f32(w0, w_local), axis, op="sum", state=state,
+            calls=calls)
         return tree_apply_delta(w0, total), state
+
+
+class SparseDeltaMerge(DeltaMerge):
+    """Eq. (8) over the top-k/error-feedback ``SparseTransport`` — the LM
+    window step's DELTA_SPARSE as an engine-level strategy.  State is the
+    residual tree (what ``init_window_state`` stores as ``"residual"``)."""
+
+    name = "delta_sparse"
+
+    def __init__(self, transport: comm.Transport | None = None, *,
+                 frac: float | None = None):
+        if transport is None:
+            transport = comm.get_transport(
+                "sparse", frac=0.01 if frac is None else frac)
+        elif frac is not None and getattr(transport, "frac", frac) != frac:
+            # an explicit transport AND a conflicting frac: refusing beats
+            # silently compressing at a rate the caller didn't ask for
+            raise ValueError(
+                f"frac={frac} conflicts with the supplied transport's "
+                f"frac={transport.frac}; configure one place only")
+        super().__init__(transport)
 
 
 class AsyncDeltaMerge(MergeStrategy):
@@ -93,32 +157,40 @@ class AsyncDeltaMerge(MergeStrategy):
     ``state`` carries last window's local delta (f32, zeros initially)."""
 
     name = "async_delta"
-    stateful = True
+    own_state = True
 
-    def init_state(self, params):
+    def _init_own_state(self, params):
         return jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
-    def __call__(self, w0, w_local, axis, state=None):
-        if state is None:
+    def __call__(self, w0, w_local, axis, state=None, *, calls=1):
+        delta_prev, tsp = self._split_state(state)
+        if delta_prev is None:
             raise ValueError("AsyncDeltaMerge needs its delta_prev state; "
                              "seed it with init_state(params)")
-        stale = jax.tree.map(lambda d: jax.lax.psum(d, axis), state)
+        stale, tsp = self.transport.all_reduce(delta_prev, axis, op="sum",
+                                               state=tsp, calls=calls)
         merged = tree_apply_delta(w_local, stale)
-        return merged, tree_sub_f32(w0, w_local)
+        return merged, self._join_state(tree_sub_f32(w0, w_local), tsp)
 
 
 _STRATEGIES = {
     "average": AverageMerge,
     "delta": DeltaMerge,
+    "delta_sparse": SparseDeltaMerge,
     "async_delta": AsyncDeltaMerge,
 }
 
 
-def get_merge(name: str) -> MergeStrategy:
-    """Factory: 'average' | 'delta' | 'async_delta'."""
+def get_merge(name: str, transport: comm.Transport | None = None,
+              **kwargs) -> MergeStrategy:
+    """Factory: 'average' | 'delta' | 'delta_sparse' | 'async_delta'.
+
+    ``transport`` plugs any ``repro.comm`` transport under the strategy
+    (default: dense XLA); ``delta_sparse`` additionally accepts ``frac``.
+    """
     if name not in _STRATEGIES:
         raise ValueError(
             f"unknown merge strategy {name!r}; choose from "
             f"{sorted(_STRATEGIES)}")
-    return _STRATEGIES[name]()
+    return _STRATEGIES[name](transport, **kwargs)

@@ -2,19 +2,28 @@
 
 One worker per device on a 1-D mesh: worker streams are sharded over the
 ``workers`` axis with shard_map, each device runs its own sequential-VQ
-inner loop, and the reducing phases are collectives —
+inner loop, and the reducing phases are collectives issued through the
+pluggable ``repro.comm`` transport layer —
 
-  * average  (eq. 3): ``lax.pmean`` of the worker versions;
-  * delta    (eq. 8): ``lax.psum`` of the worker displacements;
-  * async    (eq. 9): a per-tick MASKED psum — only workers whose
+  * average  (eq. 3): cross-worker mean of the worker versions;
+  * delta    (eq. 8): cross-worker sum of the worker displacements;
+  * async    (eq. 9): a per-tick MASKED sum — only workers whose
     communication round (drawn from the pluggable ``NetworkModel``)
     completes at this tick contribute their in-flight delta, which is the
     barrier-free reducer of the paper's cloud architecture expressed as an
-    SPMD collective.
+    SPMD collective (``Transport.masked_all_reduce``).
+
+Which wire the merge rides is the executor's ``transport``: dense XLA
+(default, the numerics oracle), the Pallas ring, or top-k sparse — and
+every collective appends a ``CommRecord``, so ``last_comm`` reports the
+bytes the run actually moved (records traced per compiled program are
+replayed on compile-cache hits).
 
 The per-worker inner loop routes the nearest-prototype search through the
-fused Pallas kernel (``kernels.ops.vq_delta``; interpret mode on CPU), so
-the hot path is the same kernel a TPU run uses, not the reference loop.
+fused Pallas kernel via ``kernels.ops.vq_delta_routed`` (interpret mode on
+CPU): codebooks that fit the VMEM budget take the fused kernel, larger
+ones the blocked-assign + segment-sum fallback — so the engine now honors
+the same larger-than-VMEM routing as the serving lookup.
 
 On CPU, force a mesh with ``--xla_force_host_platform_device_count=8`` (set
 before jax initializes; see tests/conftest.py) — the SPMD program is then
@@ -23,14 +32,14 @@ bit-for-bit the one a real 8-chip mesh runs.
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro import compat
+from repro import comm, compat
 from repro.core import vq
 from repro.core.schemes import SchemeResult
 from repro.engine import api, merge as merge_lib
@@ -69,7 +78,8 @@ def _validate_mesh(mesh: Mesh, axis: str, m: int) -> None:
 
 
 def _local_window(w0: jax.Array, zwin: jax.Array, t0: jax.Array, *,
-                  eps0: float, decay: float, use_pallas: bool
+                  eps0: float, decay: float, use_pallas: bool,
+                  vmem_budget: int | None = None
                   ) -> tuple[jax.Array, jax.Array]:
     """tau sequential VQ steps (eq. 1) on one device; returns (delta, w)."""
 
@@ -77,9 +87,11 @@ def _local_window(w0: jax.Array, zwin: jax.Array, t0: jax.Array, *,
         w, t = carry
         eps = vq.default_steps(t + 1, eps0=eps0, decay=decay)
         if use_pallas:
-            # fused distance+argmin+scatter kernel; batch of one point, so
-            # counts/zsum reduce exactly to eq. (4)'s H(z, w)
-            counts, zsum = ops.vq_delta(z[None, :], w)
+            # fused distance+argmin+scatter kernel (blocked-assign fallback
+            # past the VMEM budget); batch of one point, so counts/zsum
+            # reduce exactly to eq. (4)'s H(z, w)
+            counts, zsum = ops.vq_delta_routed(z[None, :], w,
+                                               budget_bytes=vmem_budget)
             h = counts[:, None] * w - zsum
         else:
             h = vq.H(z, w)
@@ -96,7 +108,9 @@ class MeshExecutor:
 
     def __init__(self, mesh: Mesh | None = None, axis: str = "workers",
                  network: NetworkModel | None = None, *,
+                 transport: comm.Transport | str | None = None,
                  use_pallas: bool = True, eval_every: int = 10,
+                 vmem_budget_bytes: int | None = None,
                  on_window: Callable[[int, jax.Array], None] | None = None,
                  publish_every: int = 1):
         if not axis:
@@ -109,8 +123,11 @@ class MeshExecutor:
         self.mesh = mesh
         self.axis = axis
         self.network = network or GeometricDelayNetwork()
+        self.transport = comm.get_transport(
+            transport if transport is not None else "xla")
         self.use_pallas = use_pallas
         self.eval_every = eval_every
+        self.vmem_budget_bytes = vmem_budget_bytes
         # publication hook: when set, the sync schemes run in host-level
         # chunks of ``publish_every`` windows (numerically identical — the
         # window scan is sequential either way) and ``on_window(windows_done,
@@ -120,8 +137,35 @@ class MeshExecutor:
         self.on_window = on_window
         self.publish_every = publish_every
         # compiled-program cache: rebuilding the shard_map closure on every
-        # run() would recompile each time; key = everything trace-affecting
-        self._compiled: dict[tuple, object] = {}
+        # run() would recompile each time; key = everything trace-affecting.
+        # Each entry also keeps the CommRecords traced for that program, so
+        # cache hits replay the accounting the trace measured.
+        self._compiled: dict[tuple, tuple] = {}
+        # comm summary of the most recent run()/run_segment() (CommLog dict)
+        self.last_comm: dict | None = None
+
+    # -- comm-aware compile cache -------------------------------------------
+
+    def _call_compiled(self, cache_key: tuple, build: Callable, *args):
+        """Run the cached program for ``cache_key`` (building+tracing it on
+        a miss), replaying its traced ``CommRecord``s on every hit."""
+        log = self.transport.log
+        if cache_key not in self._compiled:
+            fn = build()
+            mark = log.mark()
+            out = fn(*args)                  # first call traces -> records
+            self._compiled[cache_key] = (fn, log.since(mark))
+            return out
+        fn, records = self._compiled[cache_key]
+        log.extend(records)
+        return fn(*args)
+
+    def _merge_wire_bytes(self, cache_key: tuple) -> int:
+        """Total merge-tag wire bytes one execution of ``cache_key`` moves
+        per participant (for the network model's bandwidth charge)."""
+        _, records = self._compiled[cache_key]
+        return sum(r.wire_bytes * r.calls for r in records
+                   if r.tag == "merge")
 
     # -- public API ---------------------------------------------------------
 
@@ -139,18 +183,24 @@ class MeshExecutor:
         mesh = self.mesh if self.mesh is not None else make_worker_mesh(
             m, self.axis)
         _validate_mesh(mesh, self.axis, m)
-        if scheme == "async_delta":
-            res = self._run_async(mesh, w0, data, eval_data, tau=tau,
-                                  eps0=eps0, decay=decay, key=key)
-            if self.on_window is not None:
-                self.on_window(data.shape[1] // tau, res.w_shared)
-            return res
-        if self.on_window is not None:
-            return self._run_sync_published(mesh, scheme, w0, data,
-                                            eval_data, tau=tau, eps0=eps0,
-                                            decay=decay, t0=0)
-        return self._run_sync(mesh, scheme, w0, data, eval_data, tau=tau,
-                              eps0=eps0, decay=decay)
+        mark = self.transport.log.mark()
+        try:
+            if scheme == "async_delta":
+                res = self._run_async(mesh, w0, data, eval_data, tau=tau,
+                                      eps0=eps0, decay=decay, key=key)
+                if self.on_window is not None:
+                    self.on_window(data.shape[1] // tau, res.w_shared)
+            elif self.on_window is not None:
+                res = self._run_sync_published(mesh, scheme, w0, data,
+                                               eval_data, tau=tau, eps0=eps0,
+                                               decay=decay, t0=0)
+            else:
+                res, _ = self._run_sync(mesh, scheme, w0, data, eval_data,
+                                        tau=tau, eps0=eps0, decay=decay)
+        finally:
+            self.last_comm = comm.CommLog.summarize(
+                self.transport.log.since(mark))
+        return res
 
     def run_segment(self, scheme: str, w0: jax.Array, data: jax.Array,
                     eval_data: jax.Array, *, tau: int, eps0: float = 0.5,
@@ -176,12 +226,20 @@ class MeshExecutor:
             mesh = self.mesh if self.mesh is not None else make_worker_mesh(
                 m, self.axis)
         _validate_mesh(mesh, self.axis, m)
-        if self.on_window is not None:
-            return self._run_sync_published(mesh, scheme, w0, data,
-                                            eval_data, tau=tau, eps0=eps0,
-                                            decay=decay, t0=t0)
-        return self._run_sync(mesh, scheme, w0, data, eval_data, tau=tau,
-                              eps0=eps0, decay=decay, t0=t0)
+        mark = self.transport.log.mark()
+        try:
+            if self.on_window is not None:
+                res = self._run_sync_published(mesh, scheme, w0, data,
+                                               eval_data, tau=tau, eps0=eps0,
+                                               decay=decay, t0=t0)
+            else:
+                res, _ = self._run_sync(mesh, scheme, w0, data, eval_data,
+                                        tau=tau, eps0=eps0, decay=decay,
+                                        t0=t0)
+        finally:
+            self.last_comm = comm.CommLog.summarize(
+                self.transport.log.since(mark))
+        return res
 
     # -- synchronous schemes (eqs. 3 and 8) ---------------------------------
 
@@ -190,17 +248,23 @@ class MeshExecutor:
                             t0: int) -> SchemeResult:
         """``_run_sync`` in host-level chunks of ``publish_every`` windows,
         firing ``on_window`` after each chunk — same numerics (the window
-        scan is sequential), at most two extra compiled programs (the chunk
-        shape and one remainder shape)."""
+        scan is sequential, and the merge/transport state threads across
+        chunks exactly as it threads across the scan), at most two extra
+        compiled programs (the chunk shape and one remainder shape)."""
         n_windows = data.shape[1] // tau
-        wt = self.network.window_ticks(tau)
         w, t, done = w0, t0, 0
         curves, ticks = [], []
+        wt, ms = None, None
         while done < n_windows:
             k = min(self.publish_every, n_windows - done)
             seg = data[:, done * tau:(done + k) * tau]
-            res = self._run_sync(mesh, scheme, w, seg, eval_data, tau=tau,
-                                 eps0=eps0, decay=decay, t0=t)
+            res, ms = self._run_sync(mesh, scheme, w, seg, eval_data,
+                                     tau=tau, eps0=eps0, decay=decay, t0=t,
+                                     merge_state=ms)
+            if wt is None:
+                # per-window tick cost as the segment run charged it
+                # (window_ticks + any bandwidth transfer charge)
+                wt = int(res.wall_ticks[0])
             w = res.w_shared
             curves.append(np.asarray(res.distortion))
             ticks.append(done * wt + np.asarray(res.wall_ticks))
@@ -216,45 +280,76 @@ class MeshExecutor:
             distortion=jnp.asarray(np.concatenate(curves)))
 
     def _run_sync(self, mesh: Mesh, scheme: str, w0, data, eval_data, *,
-                  tau: int, eps0: float, decay: float,
-                  t0: int = 0) -> SchemeResult:
+                  tau: int, eps0: float, decay: float, t0: int = 0,
+                  merge_state=None) -> tuple[SchemeResult, Any]:
+        """One compiled sync segment.  Returns ``(result, merge_state)`` so
+        host-chunked callers (the publish path) can thread stateful-merge
+        state — e.g. the sparse transport's error-feedback residual —
+        across chunks instead of resetting it per program.  The host-side
+        state representation carries a leading (M, ...) worker dim (the
+        state is per-worker distinct, sharded over the axis)."""
         axis = self.axis
+        m = data.shape[0]
         n = data.shape[1]
         n_windows = n // tau
-        strategy = merge_lib.get_merge(scheme)
+        strategy = merge_lib.get_merge(scheme, transport=self.transport)
+        transport = self.transport
         use_pallas = self.use_pallas
+        vmem_budget = self.vmem_budget_bytes
+        if merge_state is None:
+            # host-side merge state carries a leading per-worker dim: the
+            # state (e.g. the sparse error-feedback residual) is DISTINCT
+            # per worker, so it crosses the program boundary sharded over
+            # the axis — not as a nominally-replicated array whose device
+            # buffers secretly disagree
+            merge_state = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (m,) + x.shape),
+                strategy.init_state(w0))
 
-        def body(w0_in, t0_in, data_l, eval_l):
+        def body(w0_in, t0_in, ms_in, data_l, eval_l):
             stream = data_l[0]                       # (n, d) local shard
             windows = stream[: n_windows * tau].reshape(n_windows, tau, -1)
             ev = eval_l[0]                           # (n_eval, d)
+            ms0 = jax.tree.map(lambda x: x[0], ms_in)  # drop worker dim
 
             def window(carry, zwin):
-                w_srd, t = carry
+                w_srd, t, ms = carry
                 _, w_fin = _local_window(w_srd, zwin, t, eps0=eps0,
-                                         decay=decay, use_pallas=use_pallas)
-                w_srd, _ = strategy(w_srd, w_fin, axis)
+                                         decay=decay, use_pallas=use_pallas,
+                                         vmem_budget=vmem_budget)
+                w_srd, ms = strategy(w_srd, w_fin, axis, ms,
+                                     calls=n_windows)
                 t = t + tau
-                c = jax.lax.pmean(vq.distortion(ev, w_srd), axis)
-                return (w_srd, t), c
+                c, _ = transport.all_reduce(
+                    vq.distortion(ev, w_srd), axis, op="mean",
+                    calls=n_windows, tag="eval")
+                return (w_srd, t, ms), c
 
-            (w_srd, _), curve = jax.lax.scan(
-                window, (w0_in, t0_in), windows)
-            return w_srd, curve
+            (w_srd, _, ms_out), curve = jax.lax.scan(
+                window, (w0_in, t0_in, ms0), windows)
+            return w_srd, curve, jax.tree.map(lambda x: x[None], ms_out)
 
         cache_key = ("sync", scheme, mesh, w0.shape, data.shape,
-                     eval_data.shape, tau, eps0, decay, use_pallas)
-        if cache_key not in self._compiled:
-            self._compiled[cache_key] = jax.jit(compat.shard_map(
-                body, mesh, in_specs=(P(), P(), P(axis), P(axis)),
-                out_specs=(P(), P()),
+                     eval_data.shape, tau, eps0, decay, use_pallas,
+                     vmem_budget)
+
+        def build():
+            return jax.jit(compat.shard_map(
+                body, mesh,
+                in_specs=(P(), P(), P(axis), P(axis), P(axis)),
+                out_specs=(P(), P(), P(axis)),
                 axis_names=frozenset({axis}), check_vma=False))
-        w_final, curve = self._compiled[cache_key](
-            w0, jnp.asarray(t0, jnp.int32), data, eval_data)
-        wt = self.network.window_ticks(tau)
+
+        w_final, curve, ms_out = self._call_compiled(
+            cache_key, build, w0, jnp.asarray(t0, jnp.int32), merge_state,
+            data, eval_data)
+        wire_per_window = self._merge_wire_bytes(cache_key) / max(
+            n_windows, 1)
+        wt = (self.network.window_ticks(tau)
+              + self.network.transfer_ticks(wire_per_window))
         ticks = jnp.arange(1, n_windows + 1, dtype=jnp.int32) * wt
         return SchemeResult(w_shared=w_final, wall_ticks=ticks,
-                            distortion=curve)
+                            distortion=curve), ms_out
 
     # -- asynchronous scheme (eq. 9) ----------------------------------------
 
@@ -269,7 +364,9 @@ class MeshExecutor:
         done_at = jnp.cumsum(lengths, axis=1)        # (M, max_rounds)
         eval_every = self.eval_every
         eval_ticks = np.arange(eval_every - 1, n, eval_every)
+        transport = self.transport
         use_pallas = self.use_pallas
+        vmem_budget = self.vmem_budget_bytes
 
         def body(w0_in, data_l, eval_l, done_at_l):
             stream = data_l[0]                       # (n, d)
@@ -277,11 +374,12 @@ class MeshExecutor:
             my_done_at = done_at_l[0]                # (max_rounds,)
 
             def tick(carry, z):
-                w, w_srd, snap, dcur, dinf, nd, t, ridx = carry
+                w, w_srd, snap, dcur, dinf, nd, t, ridx, cs = carry
                 eps = vq.default_steps(t + 1, eps0=eps0, decay=decay)
                 # local VQ step (1st line of eq. 9), Pallas hot path
                 if use_pallas:
-                    counts, zsum = ops.vq_delta(z[None, :], w)
+                    counts, zsum = ops.vq_delta_routed(
+                        z[None, :], w, budget_bytes=vmem_budget)
                     h = counts[:, None] * w - zsum
                 else:
                     h = vq.H(z, w)
@@ -293,7 +391,9 @@ class MeshExecutor:
                 donef = done.astype(w.dtype)
                 # masked merge: ONLY completing workers' in-flight deltas
                 # land on the reducer (4th line of eq. 9)
-                w_srd = w_srd - jax.lax.psum(donef * dinf, axis)
+                landed, cs = transport.masked_all_reduce(
+                    dinf, donef, axis, state=cs, calls=n)
+                w_srd = w_srd - landed
                 # completed: adopt downloaded snapshot + replay local delta
                 # (3rd line); others keep the plain step (2nd line)
                 w = jnp.where(done, snap - dcur, w_tmp)
@@ -305,27 +405,33 @@ class MeshExecutor:
                     done,
                     jnp.take(my_done_at, jnp.minimum(ridx, max_rounds - 1)),
                     nd)
-                return (w, w_srd, snap, dcur, dinf, nd, t + 1, ridx), w_srd
+                return (w, w_srd, snap, dcur, dinf, nd, t + 1, ridx, cs), \
+                    w_srd
 
             zeros = jnp.zeros_like(w0_in)
+            cs0 = transport.init_state(w0_in)
             init = (w0_in, w0_in, w0_in, zeros, zeros, my_done_at[0],
-                    jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+                    jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+                    cs0)
             carry, traj = jax.lax.scan(tick, init, stream)
             w_srd_final = carry[1]
             sel = traj[eval_ticks]                   # (n_evals, kappa, d)
             c_local = jax.vmap(lambda w_: vq.distortion(ev, w_))(sel)
-            curve = jax.lax.pmean(c_local, axis)
+            curve, _ = transport.all_reduce(c_local, axis, op="mean",
+                                            tag="eval")
             return w_srd_final, curve
 
         cache_key = ("async", mesh, w0.shape, data.shape, eval_data.shape,
-                     tau, eps0, decay, eval_every, use_pallas)
-        if cache_key not in self._compiled:
-            self._compiled[cache_key] = jax.jit(compat.shard_map(
+                     tau, eps0, decay, eval_every, use_pallas, vmem_budget)
+
+        def build():
+            return jax.jit(compat.shard_map(
                 body, mesh, in_specs=(P(), P(axis), P(axis), P(axis)),
                 out_specs=(P(), P()),
                 axis_names=frozenset({axis}), check_vma=False))
-        w_final, curve = self._compiled[cache_key](w0, data, eval_data,
-                                                   done_at)
+
+        w_final, curve = self._call_compiled(cache_key, build, w0, data,
+                                             eval_data, done_at)
         return SchemeResult(
             w_shared=w_final,
             wall_ticks=jnp.asarray(eval_ticks + 1, jnp.int32),

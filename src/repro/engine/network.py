@@ -42,6 +42,15 @@ class NetworkModel:
         """Wall ticks a synchronous tau-window costs under this network."""
         raise NotImplementedError
 
+    def transfer_ticks(self, wire_bytes: float) -> int:
+        """Extra wall ticks to move ``wire_bytes`` (a window's MEASURED
+        merge traffic from the ``repro.comm`` transport records, not a
+        modeled figure).  The base model has infinite bandwidth — latency-
+        only models charge 0 — so existing tick accounting is unchanged
+        unless a model opts in via ``bytes_per_tick``."""
+        del wire_bytes
+        return 0
+
 
 @dataclasses.dataclass(frozen=True)
 class InstantNetwork(NetworkModel):
@@ -57,15 +66,28 @@ class InstantNetwork(NetworkModel):
 
 @dataclasses.dataclass(frozen=True)
 class FixedLatencyNetwork(NetworkModel):
-    """Every communication round pays ``latency_ticks`` extra wall ticks."""
+    """Every communication round pays ``latency_ticks`` extra wall ticks.
+
+    ``bytes_per_tick`` > 0 additionally charges ceil(wire/bandwidth) ticks
+    per window for the bytes the transport layer measured (0 = the classic
+    latency-only model)."""
 
     latency_ticks: int = 1
+    bytes_per_tick: int = 0
     name = "fixed"
 
     def __post_init__(self):
         if self.latency_ticks < 0:
             raise ValueError(f"latency_ticks must be >= 0, "
                              f"got {self.latency_ticks}")
+        if self.bytes_per_tick < 0:
+            raise ValueError(f"bytes_per_tick must be >= 0, "
+                             f"got {self.bytes_per_tick}")
+
+    def transfer_ticks(self, wire_bytes):
+        if self.bytes_per_tick <= 0 or wire_bytes <= 0:
+            return 0
+        return int(-(-wire_bytes // self.bytes_per_tick))
 
     def round_lengths(self, key, m, max_rounds, tau):
         del key

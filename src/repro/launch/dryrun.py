@@ -9,6 +9,10 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe_1b_7b \
         --shape train_4k [--multi-pod] [--merge delta --tau 10]
     PYTHONPATH=src python -m repro.launch.dryrun --all   # full 40-cell sweep
+    PYTHONPATH=src python -m repro.launch.dryrun --comm  # scheme x transport
+        # wire bytes: runs the engine suite through every repro.comm
+        # transport and reports the MEASURED per-worker merge traffic from
+        # the CommRecord stream (not a model)
 """
 
 # MUST run before any other import: jax locks the device count on first init.
@@ -312,6 +316,51 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# scheme x transport comm suite (measured wire bytes)
+# ---------------------------------------------------------------------------
+
+def run_comm_suite(*, sparse_frac: float | None = None,
+                   verbose: bool = True) -> list[dict]:
+    """Run the engine suite through every transport and report the wire
+    bytes the ``CommRecord`` stream MEASURED (trace-exact shapes, replayed
+    per execution) — not the roofline model's estimate.
+
+    ``sparse_frac`` defaults to k/kappa = 0.25 (k = kappa/4 entries kept of
+    the kappa*d displacement), the ISSUE-4 acceptance point where the
+    sparse wire must come in >= 4x under dense.  The sweep itself is the
+    shared ``repro.comm.sweep`` (one definition for this report and the
+    ``--suite comm`` CI gate).
+    """
+    from repro.comm import sweep
+
+    cells = sweep.run_comm_cells(sparse_frac=sparse_frac, repeats=0)
+    dense_wire = {c["scheme"]: c["merge_wire_bytes"] for c in cells
+                  if c["transport"] == "xla"}
+    records: list[dict] = []
+    for c in cells:
+        rec = {"arch": "comm", "shape": c["scheme"],
+               "mesh": f"{c['m']}x1", "merge": c["scheme"],
+               "transport": c["transport"], "status": "ok", **{
+                   k: c[k] for k in (
+                       "m", "n", "d", "kappa", "tau", "compile_s",
+                       "merge_wire_bytes", "merge_logical_bytes",
+                       "collective_calls", "final_C")}}
+        if c["transport"] == "sparse":
+            rec["sparse_frac"] = c["sparse_frac"]
+            rec["wire_reduction_vs_dense"] = (
+                dense_wire.get(c["scheme"], 0) / c["merge_wire_bytes"]
+                if c["merge_wire_bytes"] else float("inf"))
+        records.append(rec)
+        if verbose:
+            extra = (f" reduction={rec['wire_reduction_vs_dense']:.2f}x"
+                     if c["transport"] == "sparse" else "")
+            print(f"COMM {c['scheme']:<12s} x {c['transport']:<6s} "
+                  f"wire={c['merge_wire_bytes']:>10,}B "
+                  f"logical={c['merge_logical_bytes']:>10,}B{extra}")
+    return records
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=registry.ARCH_IDS + ["paper_vq"])
@@ -327,8 +376,39 @@ def main(argv=None) -> int:
     ap.add_argument("--tau", type=int, default=10)
     ap.add_argument("--quantized", action="store_true",
                     help="int8 weight-only decode (decode cells only)")
+    ap.add_argument("--comm", action="store_true",
+                    help="engine comm suite: measured wire bytes per "
+                         "scheme x transport (8-worker mesh)")
+    ap.add_argument("--sparse-frac", type=float, default=None,
+                    help="--comm: sparse transport keep-fraction "
+                         "(default: k/kappa = 0.25, the acceptance point)")
     ap.add_argument("--out", default="benchmarks/results/dryrun.json")
     args = ap.parse_args(argv)
+
+    if args.comm:
+        results = run_comm_suite(sparse_frac=args.sparse_frac)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        keyf = lambda r: (r["arch"], r["shape"], r["mesh"],  # noqa: E731
+                          r.get("merge", "none"), r.get("quantized", False),
+                          r.get("transport", "none"))
+        merged = {keyf(r): r for r in existing}
+        for r in results:
+            merged[keyf(r)] = r
+        with open(args.out, "w") as f:
+            json.dump(list(merged.values()), f, indent=1)
+        # compression applies to displacement merges; 'average' ships means,
+        # which ride dense on every transport (see comm.sparse docstring)
+        worst = min((r["wire_reduction_vs_dense"] for r in results
+                     if r.get("transport") == "sparse"
+                     and r["merge"] != "average"), default=0.0)
+        print(f"\n{len(results)} comm cells; sparse-vs-dense merge-wire "
+              f"reduction (min over displacement schemes) = {worst:.2f}x "
+              f"(acceptance bar: >= 4x at k/kappa <= 0.25)")
+        return 0 if worst >= 4.0 else 1
 
     cells = []
     if args.all:
@@ -354,8 +434,9 @@ def main(argv=None) -> int:
     if os.path.exists(args.out):
         with open(args.out) as f:
             existing = json.load(f)
-    keyf = lambda r: (r["arch"], r["shape"], r["mesh"],
-                      r.get("merge", "none"), r.get("quantized", False))
+    keyf = lambda r: (r["arch"], r["shape"], r["mesh"],  # noqa: E731
+                      r.get("merge", "none"), r.get("quantized", False),
+                      r.get("transport", "none"))
     merged = {keyf(r): r for r in existing}
     for r in results:
         merged[keyf(r)] = r

@@ -46,6 +46,7 @@ from repro.training import steps as steps_lib
 
 def run_vq(args) -> int:
     """The paper's schemes behind the engine's Executor API."""
+    from repro import comm
     from repro.data import synthetic
     from repro.engine import get_executor, get_network
 
@@ -62,6 +63,16 @@ def run_vq(args) -> int:
     elif args.network == "geometric":
         net_kw["p_delay"] = args.p_delay
     network = get_network(args.network, **net_kw)
+    if args.transport != "xla" and args.executor != "mesh":
+        # sim replays oracles on one device and threads move blobs in
+        # process: neither has a collective for a transport to reroute
+        print(f"error: --transport {args.transport} needs --executor mesh "
+              f"(the sim/thread backends issue no collectives)")
+        return 2
+    transport = comm.get_transport(
+        args.transport,
+        **({"frac": args.compress_frac} if args.transport == "sparse"
+           else {}))
     if args.resume and not args.resize:
         # only the elastic path has VQ resume state; a plain executor would
         # silently restart from scratch, which is not a resume
@@ -83,6 +94,7 @@ def run_vq(args) -> int:
         ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
         ex_name = "elastic"
         ex_kw = {"schedule": args.resize, "network": network,
+                 "transport": transport,
                  "checkpointer": ckpt, "resume": args.resume}
     elif args.executor == "thread":
         # real threads have no tick clock: tick-based NetworkModels don't
@@ -98,6 +110,8 @@ def run_vq(args) -> int:
     else:
         ex_name = args.executor
         ex_kw = {"network": network}
+        if args.executor == "mesh":
+            ex_kw["transport"] = transport
     try:
         executor = get_executor(ex_name, **ex_kw)
     except ValueError as e:  # bad resize spec
@@ -106,7 +120,7 @@ def run_vq(args) -> int:
 
     print(f"executor={executor.name} scheme={args.scheme} "
           f"M={args.workers} tau={args.tau} network={args.network} "
-          f"devices={len(jax.devices())}"
+          f"transport={transport.name} devices={len(jax.devices())}"
           + (f" resize={args.resize}" if args.resize else ""))
     t0 = time.time()
     try:
@@ -132,6 +146,14 @@ def run_vq(args) -> int:
     pts = args.workers * args.points
     print(f"done: C(final)={curve[-1]:.5f} in {wall:.2f}s wall "
           f"({wall / pts * 1e6:.2f} us/point over {pts} points)")
+    last_comm = getattr(executor, "last_comm", None)
+    if last_comm:
+        merge_b = last_comm["by_tag"].get("merge", {"wire_bytes": 0,
+                                                    "logical_bytes": 0})
+        print(f"comm[{transport.name}]: merge wire "
+              f"{merge_b['wire_bytes']:,} B / logical "
+              f"{merge_b['logical_bytes']:,} B per worker "
+              f"({last_comm['calls']} collective calls, measured)")
     if ckpt is not None:
         ckpt.wait()
     return 0
@@ -169,6 +191,15 @@ def main(argv=None) -> int:
     ap.add_argument("--network",
                     choices=("instant", "fixed", "geometric"),
                     default="instant")
+    ap.add_argument("--transport", choices=("xla", "ring", "sparse"),
+                    default="xla",
+                    help="merge transport (mesh/elastic executors): dense "
+                         "XLA collectives, Pallas ring all-reduce (TPU; "
+                         "XLA fallback on CPU), or top-k/error-feedback "
+                         "sparse")
+    ap.add_argument("--compress-frac", type=float, default=0.01,
+                    help="sparse transport: fraction of entries each "
+                         "worker ships per merge")
     ap.add_argument("--latency", type=int, default=1)
     ap.add_argument("--p-delay", type=float, default=0.5)
     ap.add_argument("--resize", default="",

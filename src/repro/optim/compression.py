@@ -8,6 +8,11 @@ the cross-pod merge — the residual is carried into the next window's delta
 ``topk_compress`` keeps the k largest-magnitude entries per leaf (as a dense
 masked tensor — TPU-friendly; the bandwidth win is modeled for the roofline
 as k/n of the leaf bytes, and realized on hardware via sparse DCN transfers).
+
+The top-k selection itself lives in ``repro.comm.sparse`` (the pluggable
+``SparseTransport`` is the gathered-indices production form of the same
+protocol); this module keeps the dense-masked-tensor spelling for roofline
+modeling and offline compression studies.
 """
 
 from __future__ import annotations
@@ -16,6 +21,8 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.comm.sparse import topk_threshold_mask as _topk_mask
 
 
 class ErrorFeedbackState(NamedTuple):
@@ -26,14 +33,6 @@ def init_error_feedback(params) -> ErrorFeedbackState:
     return ErrorFeedbackState(
         residual=jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params))
-
-
-def _topk_mask(x: jax.Array, frac: float) -> jax.Array:
-    """Dense mask keeping the ``frac`` largest-|x| entries."""
-    flat = jnp.abs(x.reshape(-1))
-    k = max(1, int(frac * flat.size))
-    thresh = jax.lax.top_k(flat, k)[0][-1]
-    return (jnp.abs(x) >= thresh).astype(x.dtype)
 
 
 def topk_compress(delta, ef: ErrorFeedbackState, *, frac: float = 0.01

