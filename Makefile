@@ -6,6 +6,7 @@
 #   make bench-elastic — elastic resize-event cost benchmark -> BENCH_elastic.json
 #   make bench-serve   — serving suite (lookup/service/hot-swap) -> BENCH_serve.json
 #   make bench-comm    — scheme x transport wall + measured wire bytes -> BENCH_comm.json
+#   make bench-hier    — flat vs hierarchical (2x4) wall + per-tier wire bytes -> BENCH_hier.json
 #   make serve-smoke   — quantization service end to end: live elastic trainer
 #                        hot-swapping codebooks under open-loop load
 #   make ci-local      — mirror the full CI matrix locally (lint, tier-1 under
@@ -21,8 +22,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
 
 .PHONY: test lint bench-smoke bench-engine bench-elastic bench-serve \
-        bench-comm serve-smoke ci-local example-mesh example-elastic \
-        example-serve
+        bench-comm bench-hier serve-smoke ci-local example-mesh \
+        example-elastic example-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -50,6 +51,9 @@ bench-serve:
 bench-comm:
 	$(PY) -m benchmarks.run --suite comm --quick
 
+bench-hier:
+	$(PY) -m benchmarks.run --suite hier --quick
+
 serve-smoke:
 	$(PY) -m repro.launch.serve --mode vq --smoke --train-publish
 
@@ -68,6 +72,9 @@ ci-local: lint
 	$(PY) -m benchmarks.run --suite comm --quick --out BENCH_comm.fresh.json
 	$(PY) -m benchmarks.check_regression \
 		--baseline BENCH_comm.json --fresh BENCH_comm.fresh.json
+	$(PY) -m benchmarks.run --suite hier --quick --out BENCH_hier.fresh.json
+	$(PY) -m benchmarks.check_regression \
+		--baseline BENCH_hier.json --fresh BENCH_hier.fresh.json
 	$(PY) -m benchmarks.run --suite elastic --quick --out BENCH_elastic.fresh.json
 
 example-mesh:

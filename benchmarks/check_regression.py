@@ -34,6 +34,19 @@ committed ``BENCH_serve.json`` and FAILS when:
   * the hot-swap leg failed any request or served non-monotonic codebook
     versions (functional, machine-independent).
 
+**hier**: diffs a fresh ``--suite hier --quick`` output against the
+committed ``BENCH_hier.json`` and FAILS when:
+
+  * any cell's measured per-tier merge wire bytes (intra-host tier 0,
+    inter-host tier 1) differ from the baseline (trace-exact, like comm);
+  * a hierarchical-dense cell no longer bit-matches the flat reference
+    (``bitmatch_flat`` — the tentpole's oracle-equivalence contract); or
+  * the inter-host sparse-vs-dense tier-1 wire reduction drops below
+    ``--min-sparse-reduction`` (default 4x at k/kappa = 0.25); or
+  * the hier-dense-vs-flat wall parity (same box, machine divides out)
+    regresses by more than ``--max-ratio-regression`` (min over scheme
+    legs); or any final distortion diverges beyond ``--curve-rtol``.
+
 **comm**: diffs a fresh ``--suite comm --quick`` output against the
 committed ``BENCH_comm.json`` and FAILS when:
 
@@ -242,50 +255,130 @@ def check_comm(baseline: dict, fresh: dict, *,
             msgs.append(f"FAIL {key}: final distortion diverged "
                         f"(rel err {err:.2e} > {curve_rtol:.0e})")
 
-    b_red = _serve_rec(baseline, "sparse_reduction")
-    f_red = _serve_rec(fresh, "sparse_reduction")
-    if f_red is None or b_red is None:
-        ok = False
-        msgs.append("FAIL comm suite needs a 'sparse_reduction' record in "
-                    "both baseline and fresh output")
-    elif f_red["reduction"] < min_sparse_reduction:
-        ok = False
-        msgs.append(f"FAIL sparse-vs-dense wire reduction "
-                    f"{f_red['reduction']:.2f}x below the "
-                    f"{min_sparse_reduction:.0f}x bar")
-    else:
-        msgs.append(f"ok   sparse-vs-dense wire reduction "
-                    f"{f_red['reduction']:.2f}x (bar "
-                    f"{min_sparse_reduction:.0f}x)")
+    red_ok, red_msgs = _check_reduction_record(
+        baseline, fresh, kind="sparse_reduction", suite="comm",
+        label="sparse-vs-dense wire reduction", floor=min_sparse_reduction)
+    par_ok, par_msgs = _check_parity_record(
+        baseline, fresh, kind="ring_parity", label="ring/xla wall parity",
+        max_ratio_regression=max_ratio_regression)
+    return ok and red_ok and par_ok, msgs + red_msgs + par_msgs
 
-    b_par = _serve_rec(baseline, "ring_parity")
-    f_par = _serve_rec(fresh, "ring_parity")
+
+def _check_reduction_record(baseline: dict, fresh: dict, *, kind: str,
+                            suite: str, label: str,
+                            floor: float) -> tuple[bool, list[str]]:
+    """Shared floor gate on a wire-reduction record (comm + hier suites)."""
+    b_red = _serve_rec(baseline, kind)
+    f_red = _serve_rec(fresh, kind)
+    if f_red is None or b_red is None:
+        return False, [f"FAIL {suite} suite needs a {kind!r} record in "
+                       f"both baseline and fresh output"]
+    if f_red["reduction"] < floor:
+        return False, [f"FAIL {label} {f_red['reduction']:.2f}x below the "
+                       f"{floor:.0f}x bar"]
+    return True, [f"ok   {label} {f_red['reduction']:.2f}x "
+                  f"(bar {floor:.0f}x)"]
+
+
+def _check_parity_record(baseline: dict, fresh: dict, *, kind: str,
+                         label: str, max_ratio_regression: float
+                         ) -> tuple[bool, list[str]]:
+    """Shared wall-parity gate: MIN regression over the scheme legs (the
+    engine gate's flap-proof statistic — noise on an oversubscribed host
+    jitters single legs, a genuine slowdown hits all of them)."""
+    b_par = _serve_rec(baseline, kind)
+    f_par = _serve_rec(fresh, kind)
     if f_par is None or b_par is None:
-        ok = False
-        msgs.append("FAIL comm suite needs a 'ring_parity' record in both "
-                    "baseline and fresh output")
-    else:
-        # min regression over the scheme legs (same flap-proof statistic as
-        # the engine gate's min-over-M): on CPU ring == xla is the same
-        # program, so single legs jitter freely under load — a genuine ring
-        # slowdown slows EVERY scheme leg
-        schemes = sorted(set(b_par["parity"]) & set(f_par["parity"]))
-        if not schemes:
-            raise ValueError("ring_parity records share no scheme legs — "
-                             "regenerate the baseline")
-        regress = min(f_par["parity"][s] / max(b_par["parity"][s], 1e-12)
-                      for s in schemes)
-        med_b = float(np.median([b_par["parity"][s] for s in schemes]))
-        med_f = float(np.median([f_par["parity"][s] for s in schemes]))
-        line = (f"ring/xla wall parity over {schemes}: baseline median "
-                f"{med_b:.2f}x, fresh {med_f:.2f}x "
-                f"(min per-scheme regression {regress:.2f}x)")
-        if regress > max_ratio_regression:
+        return False, [f"FAIL suite needs a {kind!r} record in both "
+                       f"baseline and fresh output"]
+    schemes = sorted(set(b_par["parity"]) & set(f_par["parity"]))
+    if not schemes:
+        raise ValueError(f"{kind} records share no scheme legs — "
+                         f"regenerate the baseline")
+    regress = min(f_par["parity"][s] / max(b_par["parity"][s], 1e-12)
+                  for s in schemes)
+    med_b = float(np.median([b_par["parity"][s] for s in schemes]))
+    med_f = float(np.median([f_par["parity"][s] for s in schemes]))
+    line = (f"{label} over {schemes}: baseline median {med_b:.2f}x, "
+            f"fresh {med_f:.2f}x (min per-scheme regression {regress:.2f}x)")
+    if regress > max_ratio_regression:
+        return False, [f"FAIL {line} > {max_ratio_regression:.2f}x allowed"]
+    return True, [f"ok   {line}"]
+
+
+def _hier_cells(doc: dict) -> dict[tuple[str, str], dict]:
+    return {(r["scheme"], r["variant"]): r
+            for r in doc.get("results", []) if r.get("kind") == "cell"}
+
+
+def check_hier(baseline: dict, fresh: dict, *,
+               max_ratio_regression: float = 1.25,
+               min_sparse_reduction: float = 4.0,
+               curve_rtol: float = 1e-2) -> tuple[bool, list[str]]:
+    """Hier-suite gate; same contract as ``check``.
+
+    Per-tier wire bytes are trace-exact shape arithmetic, so they must
+    match the baseline EXACTLY; the dense-tier-1 bit-match flag is the
+    tentpole's flat-oracle equivalence and must stay True on every scheme.
+    """
+    msgs: list[str] = []
+    ok = True
+    b_cells, f_cells = _hier_cells(baseline), _hier_cells(fresh)
+    missing = sorted(set(b_cells) - set(f_cells))
+    if missing:
+        raise ValueError(
+            f"fresh hier run is missing baseline cells {missing} — the "
+            f"sweep lost coverage (regenerate the baseline only if the "
+            f"cell was removed on purpose)")
+    common = sorted(set(b_cells) & set(f_cells))
+    if not common:
+        raise ValueError("no (scheme, variant) cells shared between "
+                         "baseline and fresh hier output — regenerate with "
+                         "benchmarks.run --suite hier")
+    for key in common:
+        b, f = b_cells[key], f_cells[key]
+        cfg = ("m", "hosts", "workers_per_host", "n", "d", "kappa", "tau",
+               "tier1_frac")
+        if tuple(b.get(k) for k in cfg) != tuple(f.get(k) for k in cfg):
+            raise ValueError(
+                f"{key}: baseline config != fresh — regenerate the "
+                f"baseline (benchmarks.run --suite hier) instead of "
+                f"comparing different runs")
+        # total merge bytes too, not just the tiered split — the flat
+        # cells have no tiers, and their accounting is pinned HERE
+        drift = [(t, b.get(t, 0), f.get(t, 0))
+                 for t in ("merge_wire_bytes", "tier0_wire_bytes",
+                           "tier1_wire_bytes")
+                 if b.get(t, 0) != f.get(t, 0)]
+        if drift:
             ok = False
-            msgs.append(f"FAIL {line} > {max_ratio_regression:.2f}x allowed")
+            for t, bb, ff in drift:
+                msgs.append(
+                    f"FAIL {key}: measured {t} drifted {bb} -> {ff} "
+                    f"(accounting or collective structure changed)")
         else:
-            msgs.append(f"ok   {line}")
-    return ok, msgs
+            msgs.append(
+                f"ok   {key}: merge {f.get('merge_wire_bytes', 0)} B "
+                f"(intra {f.get('tier0_wire_bytes', 0)} B / "
+                f"inter {f.get('tier1_wire_bytes', 0)} B, exact)")
+        if key[1] == "hier_dense" and not f.get("bitmatch_flat", False):
+            ok = False
+            msgs.append(f"FAIL {key}: dense tier-1 run no longer "
+                        f"bit-matches the flat mesh oracle")
+        err = abs(f["final_C"] - b["final_C"]) / (abs(b["final_C"]) + 1e-12)
+        if err > curve_rtol:
+            ok = False
+            msgs.append(f"FAIL {key}: final distortion diverged "
+                        f"(rel err {err:.2e} > {curve_rtol:.0e})")
+
+    red_ok, red_msgs = _check_reduction_record(
+        baseline, fresh, kind="inter_reduction", suite="hier",
+        label="inter-host sparse-vs-dense tier-1 wire reduction",
+        floor=min_sparse_reduction)
+    par_ok, par_msgs = _check_parity_record(
+        baseline, fresh, kind="hier_parity", label="hier/flat wall parity",
+        max_ratio_regression=max_ratio_regression)
+    return ok and red_ok and par_ok, msgs + red_msgs + par_msgs
 
 
 def main(argv=None) -> int:
@@ -326,6 +419,12 @@ def main(argv=None) -> int:
                 min_speedup=args.min_speedup)
         elif suites[0] == "comm":
             ok, msgs = check_comm(
+                baseline, fresh,
+                max_ratio_regression=args.max_ratio_regression,
+                min_sparse_reduction=args.min_sparse_reduction,
+                curve_rtol=args.curve_rtol)
+        elif suites[0] == "hier":
+            ok, msgs = check_hier(
                 baseline, fresh,
                 max_ratio_regression=args.max_ratio_regression,
                 min_sparse_reduction=args.min_sparse_reduction,

@@ -5,6 +5,7 @@ benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run --suite engine   # executor bench
     PYTHONPATH=src python -m benchmarks.run --suite elastic  # resize cost
     PYTHONPATH=src python -m benchmarks.run --suite serve    # lookup service
+    PYTHONPATH=src python -m benchmarks.run --suite hier     # flat vs 2-tier
 """
 
 from __future__ import annotations
@@ -495,6 +496,70 @@ def bench_comm(*, quick: bool = False,
     return rows
 
 
+def bench_hier(*, quick: bool = False,
+               out_path: str = "BENCH_hier.json") -> list[str]:
+    """Flat vs hierarchical execution: every scheme through the flat
+    8-worker mesh and the 2x4 two-tier topology (dense and sparse tier 1),
+    wall clock + MEASURED per-tier merge wire bytes per cell.
+
+      * ``cell``            — one (scheme, variant) run: best-of-3 wall,
+        per-worker merge wire split into tier 0 (intra-host) and tier 1
+        (inter-host) from the per-tier ``CommRecord``s, final distortion,
+        and — for the hierarchical variants — whether the run bit-matched
+        the flat reference (``bitmatch_flat``; dense tier 1 MUST, that is
+        the tentpole's oracle-equivalence contract).
+      * ``inter_reduction`` — min over displacement schemes of the dense
+        tier-1 wire over the sparse tier-1 wire.  Machine-independent
+        (bytes are trace-exact); acceptance bar >= 4x at k/kappa = 0.25.
+      * ``hier_parity``     — per-scheme hier-dense/flat wall ratios (same
+        box, machine divides out; the gate takes the min regression over
+        schemes, the engine-gate flap-proof statistic).
+
+    CPU wall numbers are a correctness/ratio harness, not TPU-indicative.
+    The sweep lives in ``repro.comm.sweep`` — one definition shared with
+    ``launch/dryrun.py --comm``'s hier table."""
+    from repro.comm import sweep
+
+    cells = sweep.run_hier_cells(n=(200 if quick else 400), repeats=3)
+    hier = [c for c in cells if c["variant"] != "flat"]
+    tier1_frac = next(c["tier1_frac"] for c in cells
+                     if c["variant"] == "hier_sparse")
+    rows, records = [], []
+    for c in cells:
+        extra = ("" if c["variant"] == "flat"
+                 else f" bitmatch_flat={c['bitmatch_flat']}")
+        rows.append(
+            f"hier_{c['scheme']}_{c['variant']},{c['wall_s'] * 1e6:.0f},"
+            f"intra_wire_B={c['tier0_wire_bytes']}"
+            f" inter_wire_B={c['tier1_wire_bytes']}"
+            f" final_C={c['final_C']:.5f}{extra}")
+        records.append({"kind": "cell", **c})
+
+    reduction = sweep.hier_inter_reduction(cells)
+    parity = sweep.hier_wall_parity(cells)
+    dense_bitmatch = all(c["bitmatch_flat"] for c in hier
+                         if c["variant"] == "hier_dense")
+    rows.append(f"hier_inter_reduction,0,dense_over_sparse_tier1_wire="
+                f"{reduction:.2f}x (bar: >= 4x at k/kappa = 0.25)")
+    rows.append(f"hier_dense_bitmatch,0,all_schemes={dense_bitmatch}")
+    rows.append("hier_wall_parity,0,hier_dense_over_flat_wall="
+                + " ".join(f"{s}={p:.2f}x" for s, p in parity.items()))
+    records.append({"kind": "inter_reduction",
+                    "m": cells[0]["m"], "hosts": hier[0]["hosts"],
+                    "kappa": cells[0]["kappa"], "d": cells[0]["d"],
+                    "tier1_frac": tier1_frac, "reduction": reduction,
+                    "dense_bitmatch": dense_bitmatch})
+    records.append({"kind": "hier_parity", "m": cells[0]["m"],
+                    "parity": parity})
+
+    with open(out_path, "w") as f:
+        json.dump({"suite": "hier", "devices": len(jax.devices()),
+                   "backend": jax.default_backend(),
+                   "results": records}, f, indent=1)
+    rows.append(f"hier_records,0,wrote {out_path} ({len(records)} records)")
+    return rows
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -508,6 +573,7 @@ BENCHES = {
     "elastic": bench_elastic,
     "serve": bench_serve,
     "comm": bench_comm,
+    "hier": bench_hier,
 }
 
 # named groups runnable as `--suite NAME`
@@ -516,6 +582,7 @@ SUITES = {
     "elastic": ["elastic"],
     "serve": ["serve"],
     "comm": ["comm"],
+    "hier": ["hier"],
     "paper": ["fig1", "fig2", "fig3", "fig4"],
     "lm": ["throughput", "decode"],
 }
@@ -524,7 +591,8 @@ SUITES = {
 _JSON_BENCHES = {"engine": "BENCH_engine.json",
                  "elastic": "BENCH_elastic.json",
                  "serve": "BENCH_serve.json",
-                 "comm": "BENCH_comm.json"}
+                 "comm": "BENCH_comm.json",
+                 "hier": "BENCH_hier.json"}
 
 
 def suite_out_path(out: str, name: str, *, multi: bool) -> str:

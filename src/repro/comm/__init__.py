@@ -1,6 +1,6 @@
 """Pluggable communication layer — merge transports + wire-byte accounting.
 
-One ``Transport`` protocol (``comm.api``), three implementations:
+One ``Transport`` protocol (``comm.api``), four implementations:
 
   * ``XlaTransport``    (``comm.xla``)    — stock XLA f32 collectives; the
     default and the numerics oracle every other transport is tested against.
@@ -9,6 +9,10 @@ One ``Transport`` protocol (``comm.api``), three implementations:
   * ``SparseTransport`` (``comm.sparse``) — top-k + error-feedback
     compressed sums (the LM DELTA_SPARSE protocol as an engine-level
     citizen).
+  * ``HierarchicalTransport`` (``comm.hier``) — two-tier merges over a
+    ``repro.topology.Topology``: dense intra-host (tier 0), sparse
+    inter-host (tier 1), composing the transports above with per-tier
+    ``CommRecord``s.
 
 Every collective the engine/training layers issue goes through a
 transport, which appends a ``CommRecord`` (logical + wire bytes, per
@@ -16,16 +20,19 @@ participant, per call) to its ``CommLog`` — so dry-runs and benches report
 bytes that were measured from the program, not modeled.
 """
 
-from repro.comm.api import (CommLog, CommRecord, Transport, axis_size,
-                            get_transport, ring_wire_bytes, tree_f32_bytes)
+from repro.comm.api import (CommLog, CommRecord, Transport, axis_label,
+                            axis_size, get_transport, ring_wire_bytes,
+                            tree_f32_bytes)
+from repro.comm.hier import HierarchicalTransport
 from repro.comm.ring import RingTransport, ring_all_reduce
 from repro.comm.sparse import (SparseTransport, sparse_allsum, topk_count,
                                topk_threshold_mask)
 from repro.comm.xla import XlaTransport
 
 __all__ = [
-    "CommLog", "CommRecord", "Transport", "axis_size", "get_transport",
-    "ring_wire_bytes", "tree_f32_bytes",
+    "CommLog", "CommRecord", "Transport", "axis_label", "axis_size",
+    "get_transport", "ring_wire_bytes", "tree_f32_bytes",
     "XlaTransport", "RingTransport", "SparseTransport",
+    "HierarchicalTransport",
     "ring_all_reduce", "sparse_allsum", "topk_count", "topk_threshold_mask",
 ]

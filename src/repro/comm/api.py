@@ -54,9 +54,15 @@ import jax.numpy as jnp
 
 Pytree = Any
 
+#: What call sites may pass as a reduce axis: one mesh axis name, or a
+#: tuple of names reduced jointly (the hierarchical engine passes
+#: ``(host_axis, worker_axis)`` — jax collectives accept either spelling).
+Axis = Any
 
-def axis_size(axis: str) -> int:
-    """Static size of a named mesh axis, usable inside a traced body.
+
+def axis_size(axis: Axis) -> int:
+    """Static size of a named mesh axis (or joint size of a tuple of
+    axes), usable inside a traced body.
 
     ``lax.psum`` of a non-tracer constant folds to ``size * x`` without
     emitting a collective, so this is free and exact at trace time.
@@ -65,6 +71,13 @@ def axis_size(axis: str) -> int:
         return int(jax.lax.psum(1, axis))
     except Exception:  # noqa: BLE001 — unbound axis (unit tests off-mesh)
         return 1
+
+
+def axis_label(axis: Axis) -> str:
+    """Canonical string form of an axis spec for ``CommRecord.axis``."""
+    if isinstance(axis, str):
+        return axis
+    return "+".join(axis)
 
 
 def tree_f32_bytes(tree: Pytree, *, floating_only: bool = False) -> int:
@@ -102,6 +115,9 @@ class CommRecord:
     wire_bytes: int        # bytes per participant per call on the wire
     calls: int = 1
     tag: str = "merge"     # 'merge' | 'eval' | 'late_delta'
+    # hierarchical transports split one merge over tiers: 0 = intra-host
+    # (ICI-class), 1 = inter-host (DCN-class).  None = untiered (flat).
+    tier: int | None = None
 
 
 class CommLog:
@@ -146,7 +162,14 @@ class CommLog:
 
     @staticmethod
     def summarize(records) -> dict:
-        """Totals (``wire/logical bytes * calls``) overall and per tag."""
+        """Totals (``wire/logical bytes * calls``) overall and per tag.
+
+        Tiered records (a ``HierarchicalTransport`` merge) additionally
+        land in a ``by_tier`` sub-dict under their tag, so callers can
+        read intra-host (tier 0) vs inter-host (tier 1) traffic without
+        walking the raw record stream.  Untiered records add nothing
+        there, keeping flat summaries byte-identical to before.
+        """
         out: dict = {"calls": 0, "logical_bytes": 0, "wire_bytes": 0,
                      "by_tag": {}}
         for r in records:
@@ -158,6 +181,14 @@ class CommLog:
             t["calls"] += r.calls
             t["logical_bytes"] += r.logical_bytes * r.calls
             t["wire_bytes"] += r.wire_bytes * r.calls
+            if r.tier is not None:
+                tiers = t.setdefault("by_tier", {})
+                tr = tiers.setdefault(
+                    r.tier,
+                    {"calls": 0, "logical_bytes": 0, "wire_bytes": 0})
+                tr["calls"] += r.calls
+                tr["logical_bytes"] += r.logical_bytes * r.calls
+                tr["wire_bytes"] += r.wire_bytes * r.calls
         return out
 
 
@@ -184,29 +215,35 @@ class Transport:
         raise NotImplementedError
 
     def record_host_transfer(self, *, logical_bytes: int, wire_bytes: int,
-                             participants: int, axis: str, calls: int = 1,
-                             tag: str = "late_delta") -> None:
+                             participants: int, axis: Axis, calls: int = 1,
+                             tag: str = "late_delta",
+                             tier: int | None = None) -> None:
         """Account a host-side transfer that bypasses the collectives (an
-        elastic resize moving departing workers' late deltas)."""
+        elastic resize moving departing workers' late deltas).  ``tier``
+        is the link class it crossed: the caller knows whether a departure
+        left a host group (tier 1) or a flat worker set (untiered)."""
         self.log.append(CommRecord(
-            op="host", transport=self.name, axis=axis,
+            op="host", transport=self.name, axis=axis_label(axis),
             participants=participants, logical_bytes=logical_bytes,
-            wire_bytes=wire_bytes, calls=calls, tag=tag))
+            wire_bytes=wire_bytes, calls=calls, tag=tag, tier=tier))
 
 
 def get_transport(name, **kwargs) -> Transport:
-    """Factory: 'xla' | 'ring' | 'sparse' (+ transport kwargs).
+    """Factory: 'xla' | 'ring' | 'sparse' | 'hier' (+ transport kwargs).
 
     An already-constructed ``Transport`` passes through unchanged, so call
-    sites can accept either spelling.
+    sites can accept either spelling.  'hier' composes two of the others
+    over a two-tier topology (``tier0=``/``tier1=``/``tier1_frac=`` — see
+    ``repro.comm.hier``).
     """
     if isinstance(name, Transport):
         return name
+    from repro.comm.hier import HierarchicalTransport
     from repro.comm.ring import RingTransport
     from repro.comm.sparse import SparseTransport
     from repro.comm.xla import XlaTransport
     transports = {"xla": XlaTransport, "ring": RingTransport,
-                  "sparse": SparseTransport}
+                  "sparse": SparseTransport, "hier": HierarchicalTransport}
     if name not in transports:
         raise ValueError(
             f"unknown transport {name!r}; choose from {sorted(transports)}")

@@ -1,0 +1,235 @@
+"""``HierarchicalTransport`` — two-tier merges over a hierarchical platform.
+
+The paper's final scheme exists because its platform was hierarchical:
+intra-machine links were cheap, inter-machine (Azure DCN) links slow and
+synchronization costly.  This transport expresses that shape by COMPOSING
+the existing transports over the two axes of a ``repro.topology.Topology``
+mesh instead of reimplementing any collective:
+
+  * **tier 0** (intra-host, ``worker_axis``): a dense transport — XLA
+    collectives or the Pallas ring — reduces inside each host group over
+    the cheap links;
+  * **tier 1** (inter-host, ``host_axis``): the group partials cross the
+    slow links, by default through ``SparseTransport`` (top-k +
+    error-feedback — Kamp et al.'s cheap-frequent-local /
+    expensive-infrequent-global shape, with Patra's staleness-tolerant
+    analysis justifying the lossy-but-error-fed global tier).
+
+Every delegated call's ``CommRecord``s are re-tagged with ``tier=`` before
+landing in this transport's log, so executors report intra- vs inter-host
+wire bytes separately (``last_comm["by_tag"]["merge"]["by_tier"]``) and the
+network model can charge the DCN tier at its own bandwidth.
+
+Numerics contracts:
+
+  * **dense tier 1 is the flat collective** — when both tiers are dense
+    (stateless ``XlaTransport``-family), the two-stage reduce is FUSED
+    into one collective over the joint ``(host_axis, worker_axis)`` group.
+    On a row-major topology grid that group enumerates devices in exactly
+    the flat-mesh order, so a hierarchical run with dense tier 1 is
+    bit-for-bit the flat run (the acceptance test pins this; a genuinely
+    two-stage f32 reduce would re-associate the sum).  The accounting
+    still splits per tier: tier 0 charges the dense ring inside a group
+    (m = workers_per_host), tier 1 the dense ring across groups
+    (m = hosts) — the bytes the two-tier schedule moves on each link
+    class.
+  * **degenerate hosts == 1 is the flat path** — called with the bare
+    worker axis (a flat topology's spec), only tier 0 runs and tier 1 is
+    skipped entirely (no record, no wire), so a ``hosts=1`` hierarchical
+    run collapses bit-identically to today's engine.
+  * **sparse tier 1 compresses partials** — each worker's tier-0 group
+    sum rides the top-k/error-feedback gather across the host axis; the
+    residual is tier-1 transport state threaded through scan carries like
+    any stateful merge state (``init_state`` returns the per-tier dict).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.api import (Axis, CommRecord, Pytree, Transport, axis_size,
+                            get_transport, ring_wire_bytes, tree_f32_bytes)
+from repro.comm.xla import XlaTransport
+
+
+class HierarchicalTransport(Transport):
+    """Tier-0 dense intra-host + tier-1 (default sparse) inter-host."""
+
+    name = "hier"
+
+    def __init__(self, tier0: Transport | str = "xla",
+                 tier1: Transport | str = "sparse", *,
+                 tier1_frac: float | None = None,
+                 host_axis: str = "hosts", worker_axis: str = "workers"):
+        super().__init__()
+        if host_axis == worker_axis or not host_axis or not worker_axis:
+            raise ValueError(
+                f"hier transport needs two distinct non-empty axes, got "
+                f"({host_axis!r}, {worker_axis!r})")
+        if isinstance(tier1, str) and tier1 == "sparse":
+            tier1 = get_transport(
+                "sparse", frac=0.01 if tier1_frac is None else tier1_frac)
+        elif tier1_frac is not None:
+            frac = getattr(get_transport(tier1), "frac", None)
+            if frac != tier1_frac:
+                # an explicit tier-1 transport AND a conflicting frac:
+                # refusing beats silently compressing at another rate
+                raise ValueError(
+                    f"tier1_frac={tier1_frac} conflicts with the supplied "
+                    f"tier-1 transport (frac={frac}); configure one place "
+                    f"only")
+        self.tier0 = get_transport(tier0)
+        self.tier1 = get_transport(tier1)
+        self.host_axis = host_axis
+        self.worker_axis = worker_axis
+        # delegated calls record into the sub-transports' own logs (left in
+        # place — SparseTransport's dense sidecar aliases its log at
+        # construction, so swapping logs would orphan the mean records);
+        # ``_delegate`` mark/since-copies each call's records here, tagged
+        # with their tier, so this log is the one coherent stream
+
+    @property
+    def stateful(self) -> bool:  # type: ignore[override]
+        return self.tier0.stateful or self.tier1.stateful
+
+    @property
+    def tier1_frac(self) -> float | None:
+        return getattr(self.tier1, "frac", None)
+
+    # -- axis / state plumbing ----------------------------------------------
+
+    def _tiers_of(self, axis: Axis) -> bool:
+        """True = two-tier (joint axis), False = tier-0 only (flat spec)."""
+        if axis == (self.host_axis, self.worker_axis):
+            return True
+        if axis == self.worker_axis:
+            return False
+        raise ValueError(
+            f"hier transport reduces over {(self.host_axis, self.worker_axis)} "
+            f"(or the bare {self.worker_axis!r} on a flat topology), "
+            f"got {axis!r}")
+
+    def init_state(self, tree: Pytree) -> Pytree | None:
+        s0 = self.tier0.init_state(tree)
+        s1 = self.tier1.init_state(tree)
+        if s0 is None and s1 is None:
+            return None
+        return {"t0": s0, "t1": s1}
+
+    @staticmethod
+    def _split_state(state):
+        if state is None:
+            return None, None
+        return state.get("t0"), state.get("t1")
+
+    def _join_state(self, state, s0, s1):
+        # a ``state=None`` call runs residual-free and stays None (the
+        # one-shot convention every stateful transport follows)
+        if state is None:
+            return None
+        return {"t0": s0, "t1": s1}
+
+    def _delegate(self, sub: Transport, tier: int, method: str, *args,
+                  **kwargs):
+        """Call ``sub.method`` and re-log its records tagged ``tier=``."""
+        mark = sub.log.mark()
+        out = getattr(sub, method)(*args, **kwargs)
+        for r in sub.log.since(mark):
+            self.log.append(dataclasses.replace(r, tier=tier))
+        return out
+
+    # -- the fused dense path ------------------------------------------------
+
+    def _dense_fusable(self, op: str) -> bool:
+        """Both tiers stateless-dense: one joint-axis collective is the
+        same group as the flat mesh (bit-for-bit), so fuse."""
+        del op
+        return (isinstance(self.tier0, XlaTransport)
+                and isinstance(self.tier1, XlaTransport))
+
+    def _record_tiers(self, op: str, logical: int, *, calls: int,
+                      tag: str) -> None:
+        """Per-tier dense accounting of one fused joint collective: the
+        bytes the two-tier schedule moves on each link class."""
+        wph = axis_size(self.worker_axis)
+        hosts = axis_size(self.host_axis)
+        self.log.append(CommRecord(
+            op=op, transport=self.tier0.name, axis=self.worker_axis,
+            participants=wph, logical_bytes=logical,
+            wire_bytes=ring_wire_bytes(logical, wph), calls=calls, tag=tag,
+            tier=0))
+        self.log.append(CommRecord(
+            op=op, transport=self.tier1.name, axis=self.host_axis,
+            participants=hosts, logical_bytes=logical,
+            wire_bytes=ring_wire_bytes(logical, hosts), calls=calls,
+            tag=tag, tier=1))
+
+    def _fused(self, tree: Pytree, joint: tuple, *, op: str, calls: int,
+               tag: str, mask=None) -> Pytree:
+        rec_op = op if mask is None else "masked_sum"
+        if op == "mean":
+            self._record_tiers(
+                "mean", tree_f32_bytes(tree, floating_only=True),
+                calls=calls, tag=tag)
+            return jax.tree.map(
+                lambda x: self.tier0._mean_leaf(x, joint)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+        self._record_tiers(rec_op, tree_f32_bytes(tree), calls=calls,
+                           tag=tag)
+        if mask is None:
+            return jax.tree.map(
+                lambda x: self.tier0._sum_leaf(x, joint), tree)
+        return jax.tree.map(
+            lambda x: self.tier0._sum_leaf(mask * x, joint), tree)
+
+    # -- Transport API -------------------------------------------------------
+
+    def all_reduce(self, tree: Pytree, axis: Axis, *, op: str = "sum",
+                   state: Pytree | None = None, calls: int = 1,
+                   tag: str = "merge") -> tuple[Pytree, Pytree | None]:
+        if op not in ("sum", "mean"):
+            raise ValueError(
+                f"unknown reduce op {op!r}; choose 'sum' or 'mean'")
+        if not self._tiers_of(axis):
+            # flat topology: tier-0 only, bit-identical to the plain path
+            return self._delegate(self.tier0, 0, "all_reduce", tree,
+                                  self.worker_axis, op=op, state=state,
+                                  calls=calls, tag=tag)
+        if self._dense_fusable(op):
+            return self._fused(tree, axis, op=op, calls=calls,
+                               tag=tag), state
+        s0, s1 = self._split_state(state)
+        partial, s0 = self._delegate(
+            self.tier0, 0, "all_reduce", tree, self.worker_axis, op=op,
+            state=s0, calls=calls, tag=tag)
+        total, s1 = self._delegate(
+            self.tier1, 1, "all_reduce", partial, self.host_axis, op=op,
+            state=s1, calls=calls, tag=tag)
+        return total, self._join_state(state, s0, s1)
+
+    def masked_all_reduce(self, tree: Pytree, mask: jax.Array, axis: Axis, *,
+                          state: Pytree | None = None, calls: int = 1,
+                          tag: str = "merge") -> tuple[Pytree, Pytree | None]:
+        if not self._tiers_of(axis):
+            return self._delegate(self.tier0, 0, "masked_all_reduce", tree,
+                                  mask, self.worker_axis, state=state,
+                                  calls=calls, tag=tag)
+        if self._dense_fusable("sum"):
+            return self._fused(tree, axis, op="sum", calls=calls, tag=tag,
+                               mask=mask), state
+        s0, s1 = self._split_state(state)
+        # tier 0: only this group's round-completing workers contribute
+        partial, s0 = self._delegate(
+            self.tier0, 0, "masked_all_reduce", tree, mask,
+            self.worker_axis, state=s0, calls=calls, tag=tag)
+        # tier 1: the group partials (possibly zero this tick) always sum
+        # across hosts — an SPMD program cannot skip a collective, and the
+        # error feedback keeps a zero partial from consuming residual mass
+        total, s1 = self._delegate(
+            self.tier1, 1, "all_reduce", partial, self.host_axis, op="sum",
+            state=s1, calls=calls, tag=tag)
+        return total, self._join_state(state, s0, s1)
+

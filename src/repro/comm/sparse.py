@@ -32,8 +32,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.comm.api import (CommRecord, Pytree, Transport, axis_size,
-                            tree_f32_bytes)
+from repro.comm.api import (CommRecord, Pytree, Transport, axis_label,
+                            axis_size, tree_f32_bytes)
 from repro.comm.xla import XlaTransport
 
 
@@ -113,8 +113,8 @@ class SparseTransport(Transport):
                     mask: jax.Array | None) -> tuple[Pytree, Pytree]:
         m = axis_size(axis)
         self.log.append(CommRecord(
-            op=op, transport=self.name, axis=axis, participants=m,
-            logical_bytes=tree_f32_bytes(tree),
+            op=op, transport=self.name, axis=axis_label(axis),
+            participants=m, logical_bytes=tree_f32_bytes(tree),
             wire_bytes=self._wire_bytes(tree, m), calls=calls, tag=tag))
         residual = self.init_state(tree) if state is None else state
         flat, treedef = jax.tree.flatten(tree)

@@ -94,3 +94,118 @@ def ring_parity(cells: list[dict]) -> dict[str, float]:
     wall = {(c["scheme"], c["transport"]): c["wall_s"] for c in cells}
     return {s: wall[(s, "ring")] / max(wall[(s, "xla")], 1e-12)
             for s in SCHEMES}
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (two-tier) cells — shared by dryrun --comm and --suite hier
+# ---------------------------------------------------------------------------
+
+HIER_VARIANTS = ("flat", "hier_dense", "hier_sparse")
+
+
+def run_hier_cells(*, m: int = 8, hosts: int = 2, n: int = 240, d: int = 8,
+                   kappa: int = 16, tau: int = 10,
+                   tier1_frac: float | None = None, repeats: int = 1,
+                   seed: int = 0) -> list[dict]:
+    """Every scheme through the flat mesh and the hierarchical one (dense
+    and sparse tier 1) on the same data; returns one dict per cell with
+    the measured per-tier merge wire bytes, wall seconds, final
+    distortion, and (for the hierarchical dense cells) whether the run
+    bit-matched the flat reference — the tentpole's oracle equivalence.
+
+    Needs ``hosts * (m // hosts)`` devices; ``m`` is clamped to a whole
+    number of host groups on small device counts (hosts collapses to 1
+    when fewer than ``hosts`` devices exist — the degenerate topology).
+    """
+    import jax
+    import numpy as np
+
+    from repro import comm
+    from repro.data import synthetic
+    from repro.engine import InstantNetwork, MeshExecutor
+    from repro.topology import Topology
+
+    n_dev = len(jax.devices())
+    hosts = min(hosts, n_dev)
+    wph = max(1, min(m, n_dev) // hosts)
+    m = hosts * wph
+    if tier1_frac is None:
+        tier1_frac = acceptance_sparse_frac(kappa, d)
+    key = jax.random.PRNGKey(seed)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, : min(200, n)]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+    topo = Topology.from_spec(m, hosts=hosts)
+
+    def make_ex(variant):
+        if variant == "flat":
+            return MeshExecutor(network=InstantNetwork())
+        tier1 = "xla" if variant == "hier_dense" else "sparse"
+        transport = comm.HierarchicalTransport(
+            tier0="xla", tier1=tier1,
+            tier1_frac=tier1_frac if tier1 == "sparse" else None,
+            host_axis=topo.host_axis, worker_axis=topo.worker_axis)
+        return MeshExecutor(topology=topo, network=InstantNetwork(),
+                            transport=transport)
+
+    cells: list[dict] = []
+    flat_final: dict[str, tuple] = {}
+    for variant in HIER_VARIANTS:
+        for scheme in SCHEMES:
+            ex = make_ex(variant)
+            t0 = time.time()
+            res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
+            jax.block_until_ready(res.w_shared)   # compile + first run
+            compile_s = time.time() - t0
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
+                jax.block_until_ready(res.w_shared)
+                best = min(best, time.perf_counter() - t0)
+            merge = ex.last_comm["by_tag"].get(
+                "merge", {"wire_bytes": 0, "logical_bytes": 0, "calls": 0})
+            by_tier = merge.get("by_tier", {})
+            cell = {
+                "scheme": scheme, "variant": variant,
+                "hosts": hosts if variant != "flat" else 1,
+                "workers_per_host": wph if variant != "flat" else m,
+                "m": m, "n": n, "d": d, "kappa": kappa, "tau": tau,
+                "tier1_frac": (tier1_frac if variant == "hier_sparse"
+                               else None),
+                "compile_s": round(compile_s, 1),
+                "wall_s": best if repeats else compile_s,
+                "merge_wire_bytes": merge["wire_bytes"],
+                "tier0_wire_bytes": by_tier.get(0, {}).get("wire_bytes", 0),
+                "tier1_wire_bytes": by_tier.get(1, {}).get("wire_bytes", 0),
+                "final_C": float(res.distortion[-1]),
+            }
+            if variant == "flat":
+                flat_final[scheme] = (np.asarray(res.w_shared),
+                                      np.asarray(res.distortion))
+            else:
+                fw, fc = flat_final[scheme]
+                cell["bitmatch_flat"] = bool(
+                    np.array_equal(fw, np.asarray(res.w_shared))
+                    and np.array_equal(fc, np.asarray(res.distortion)))
+            cells.append(cell)
+    return cells
+
+
+def hier_inter_reduction(cells: list[dict]) -> float:
+    """Min over displacement schemes of the dense tier-1 wire over the
+    sparse tier-1 wire — the inter-host bytes the sparse tier saves on the
+    slow links ('average' ships means, which ride dense everywhere)."""
+    wire = {(c["scheme"], c["variant"]): c["tier1_wire_bytes"]
+            for c in cells if c["variant"] != "flat"}
+    return min(wire[(s, "hier_dense")] / max(wire[(s, "hier_sparse")], 1)
+               for s in SCHEMES if s != "average")
+
+
+def hier_wall_parity(cells: list[dict]) -> dict[str, float]:
+    """Per-scheme hier-dense/flat wall ratios (same box, machine divides
+    out; the gate takes the min regression over schemes)."""
+    wall = {(c["scheme"], c["variant"]): c["wall_s"] for c in cells}
+    return {s: wall[(s, "hier_dense")] / max(wall[(s, "flat")], 1e-12)
+            for s in SCHEMES}

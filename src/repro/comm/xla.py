@@ -12,8 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.comm.api import (CommRecord, Pytree, Transport, axis_size,
-                            ring_wire_bytes, tree_f32_bytes)
+from repro.comm.api import (CommRecord, Pytree, Transport, axis_label,
+                            axis_size, ring_wire_bytes, tree_f32_bytes)
 
 
 class XlaTransport(Transport):
@@ -29,13 +29,13 @@ class XlaTransport(Transport):
     def _mean_leaf(self, x: jax.Array, axis: str) -> jax.Array:
         return jax.lax.pmean(x.astype(jnp.float32), axis).astype(x.dtype)
 
-    def _record(self, op: str, axis: str, logical: int, *, calls: int,
+    def _record(self, op: str, axis, logical: int, *, calls: int,
                 tag: str) -> None:
         m = axis_size(axis)
         self.log.append(CommRecord(
-            op=op, transport=self.name, axis=axis, participants=m,
-            logical_bytes=logical, wire_bytes=ring_wire_bytes(logical, m),
-            calls=calls, tag=tag))
+            op=op, transport=self.name, axis=axis_label(axis),
+            participants=m, logical_bytes=logical,
+            wire_bytes=ring_wire_bytes(logical, m), calls=calls, tag=tag))
 
     def all_reduce(self, tree: Pytree, axis: str, *, op: str = "sum",
                    state: Pytree | None = None, calls: int = 1,

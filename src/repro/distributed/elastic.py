@@ -18,8 +18,8 @@ down:
     eq. 8 applied to the straggler's stale window; optionally scaled by
     staleness as in [4], Zinkevich et al.).
 
-The decision logic is pure and unit-tested; the device-level rebuild is a
-thin wrapper over jax.make_mesh.
+The decision logic is pure and unit-tested; the device-level rebuild goes
+through ``repro.topology`` like every other mesh in the repo.
 """
 
 from __future__ import annotations
@@ -62,11 +62,8 @@ def plan_remesh(n_devices: int, *, prev_data: int, prev_model: int
 
 
 def build_mesh(plan: RemeshPlan) -> jax.sharding.Mesh:
-    n = plan.data * plan.model
-    devices = jax.devices()[:n]
-    import numpy as np
-    grid = np.array(devices).reshape(plan.data, plan.model)
-    return jax.sharding.Mesh(grid, ("data", "model"))
+    from repro.topology import Topology
+    return Topology.flat(plan.data * plan.model).make_mesh(model=plan.model)
 
 
 def staleness_scale(delay_windows: int, *, gamma: float = 0.5) -> float:

@@ -17,7 +17,7 @@ merge's bytes actually move: dense XLA, Pallas ring, or top-k sparse,
 with per-call wire-byte accounting).
 """
 
-from repro.comm import Transport, get_transport
+from repro.comm import HierarchicalTransport, Transport, get_transport
 from repro.engine.api import SCHEMES, Executor, get_executor
 from repro.engine.elastic import (ElasticMeshExecutor, ResizeEvent,
                                   ResizeSchedule)
@@ -28,10 +28,11 @@ from repro.engine.network import (FixedLatencyNetwork, GeometricDelayNetwork,
                                   InstantNetwork, NetworkModel, get_network)
 from repro.engine.sim import SimExecutor
 from repro.engine.threads import ThreadExecutor
+from repro.topology import Topology
 
 __all__ = [
     "SCHEMES", "Executor", "get_executor",
-    "Transport", "get_transport",
+    "Transport", "get_transport", "HierarchicalTransport", "Topology",
     "MergeStrategy", "AverageMerge", "DeltaMerge", "AsyncDeltaMerge",
     "SparseDeltaMerge", "get_merge",
     "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",

@@ -56,9 +56,13 @@ def get_executor(name: str, **kwargs) -> Executor:
     ``(window, new_m)`` pairs, or a ``"WINDOW:M,..."`` spec string).
 
     'mesh' and 'elastic' additionally accept ``transport=`` — a
-    ``repro.comm`` transport name ('xla' | 'ring' | 'sparse') or instance —
-    selecting how the reducing phases move their bytes; the executor's
-    ``last_comm`` then reports the measured wire bytes of each run."""
+    ``repro.comm`` transport name ('xla' | 'ring' | 'sparse' | 'hier') or
+    instance — selecting how the reducing phases move their bytes; the
+    executor's ``last_comm`` then reports the measured wire bytes of each
+    run.  They also accept ``topology=`` (a ``repro.topology.Topology``):
+    a hierarchical topology runs the schemes on the 2-D (hosts, workers)
+    mesh — pair it with a ``HierarchicalTransport`` for per-tier merges —
+    and makes elastic resizes move whole host groups."""
     if name == "sim":
         from repro.engine.sim import SimExecutor
         return SimExecutor(**kwargs)

@@ -49,6 +49,7 @@ from repro.distributed import elastic as elastic_lib
 from repro.engine import api
 from repro.engine.mesh import MeshExecutor, make_worker_mesh
 from repro.engine.network import InstantNetwork, NetworkModel
+from repro.topology import Topology
 
 ELASTIC_SCHEMES = ("average", "delta")
 
@@ -151,6 +152,14 @@ class ElasticMeshExecutor:
                       ``staleness_scale(1, gamma)``; 'drop' discards them
                       (the restart-style baseline).
     resize_cost_ticks: wall ticks charged per resize event on the curve axis.
+    topology:         optional ``repro.topology.Topology``.  A hierarchical
+                      topology turns every resize into MULTI-HOST
+                      elasticity: targets are clamped to whole host groups
+                      (``workers_per_host`` stays fixed, the HOST tier
+                      grows/shrinks), each segment runs on its own
+                      ``(hosts, workers)`` mesh, and the shared transport
+                      (typically ``HierarchicalTransport``) keeps per-tier
+                      accounting across the whole run.
     """
 
     name = "elastic"
@@ -158,6 +167,7 @@ class ElasticMeshExecutor:
     def __init__(self, schedule, network: NetworkModel | None = None,
                  axis: str = "workers", *, use_pallas: bool = True,
                  transport: comm.Transport | str | None = None,
+                 topology: Topology | None = None,
                  checkpointer=None, resume: bool = False,
                  late_policy: str = "merge", staleness_gamma: float = 0.5,
                  resize_cost_ticks: int = 0, on_window=None,
@@ -176,6 +186,9 @@ class ElasticMeshExecutor:
                              f"got {publish_every}")
         self.schedule = schedule
         self.network = network or InstantNetwork()
+        self.topology = topology
+        if topology is not None:
+            axis = topology.worker_axis
         self.axis = axis
         self.use_pallas = use_pallas
         # ONE transport shared by every per-M segment executor, so the whole
@@ -200,14 +213,35 @@ class ElasticMeshExecutor:
 
     # -- internals ----------------------------------------------------------
 
+    @property
+    def _hierarchical(self) -> bool:
+        return self.topology is not None and not self.topology.is_flat
+
     def _executor_for(self, m: int, prev_m: int) -> MeshExecutor:
-        """(Re)build the device mesh for ``m`` workers via ``plan_remesh``."""
+        """(Re)build the device mesh for ``m`` workers via ``plan_remesh``.
+
+        On a hierarchical topology the worker count maps to WHOLE host
+        groups (``workers_per_host`` fixed, the host tier resized), so the
+        per-M executor carries its own ``hosts x workers_per_host``
+        topology — a host-group departure/arrival is a resharding event on
+        the host axis, not a restart."""
         if m not in self._mesh_ex:
-            plan = elastic_lib.plan_remesh(m, prev_data=prev_m, prev_model=1)
-            mesh = make_worker_mesh(plan.data * plan.model, self.axis)
-            self._mesh_ex[m] = MeshExecutor(
-                mesh=mesh, axis=self.axis, network=self.network,
-                transport=self.transport, use_pallas=self.use_pallas)
+            if self._hierarchical:
+                wph = self.topology.workers_per_host
+                topo = Topology.from_spec(
+                    m, hosts=max(1, m // wph),
+                    host_axis=self.topology.host_axis,
+                    worker_axis=self.topology.worker_axis)
+                self._mesh_ex[m] = MeshExecutor(
+                    topology=topo, network=self.network,
+                    transport=self.transport, use_pallas=self.use_pallas)
+            else:
+                plan = elastic_lib.plan_remesh(m, prev_data=prev_m,
+                                               prev_model=1)
+                mesh = make_worker_mesh(plan.data * plan.model, self.axis)
+                self._mesh_ex[m] = MeshExecutor(
+                    mesh=mesh, axis=self.axis, network=self.network,
+                    transport=self.transport, use_pallas=self.use_pallas)
         return self._mesh_ex[m]
 
     @staticmethod
@@ -224,6 +258,19 @@ class ElasticMeshExecutor:
 
     def _clamp_m(self, requested: int) -> tuple[int, "elastic_lib.RemeshPlan"]:
         n_dev = len(jax.devices())
+        if self._hierarchical:
+            # multi-host elasticity resizes WHOLE host groups: round the
+            # target down to a multiple of workers_per_host (at least one
+            # group), then clamp to the available devices
+            wph = self.topology.workers_per_host
+            m = max(wph, min(requested, n_dev) // wph * wph)
+            if m > n_dev:
+                raise ValueError(
+                    f"one host group needs {wph} devices, have {n_dev} "
+                    f"(hint: --xla_force_host_platform_device_count)")
+            plan = elastic_lib.plan_remesh(m, prev_data=requested,
+                                           prev_model=1)
+            return m, plan
         plan = elastic_lib.plan_remesh(min(requested, n_dev),
                                        prev_data=requested, prev_model=1)
         return plan.data * plan.model, plan
@@ -387,11 +434,14 @@ class ElasticMeshExecutor:
                     gamma=self.staleness_gamma)
                 # the departing workers' deltas ride the same accounting
                 # stream as the collectives: each uploads one (kappa, d)
-                # f32 displacement to the survivors, host-side
+                # f32 displacement to the survivors, host-side.  On a
+                # hierarchical topology the departed workers were whole
+                # host groups, so the upload crossed the inter-host tier.
                 self.transport.record_host_transfer(
                     logical_bytes=4 * int(w_srd.size),
                     wire_bytes=4 * int(w_srd.size),
-                    participants=n_dep, axis=self.axis, tag="late_delta")
+                    participants=n_dep, axis=self.axis, tag="late_delta",
+                    tier=1 if self._hierarchical else None)
             else:
                 late_skipped = True  # pool too dry; recorded, not silent
         # rebuild the mesh for the survivors (cached per M)

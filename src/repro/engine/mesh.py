@@ -1,9 +1,15 @@
 """``MeshExecutor`` — the paper's schemes on a REAL JAX device mesh.
 
-One worker per device on a 1-D mesh: worker streams are sharded over the
-``workers`` axis with shard_map, each device runs its own sequential-VQ
-inner loop, and the reducing phases are collectives issued through the
-pluggable ``repro.comm`` transport layer —
+One worker per device: worker streams are sharded over the worker axes
+with shard_map, each device runs its own sequential-VQ inner loop, and the
+reducing phases are collectives issued through the pluggable ``repro.comm``
+transport layer.  The mesh comes from a ``repro.topology.Topology`` — a
+flat topology (the default) is the classic 1-D ``workers`` axis; a
+hierarchical one (``topology=Topology.from_spec(8, hosts=2)``) builds the
+2-D ``(hosts, workers)`` grid, the scans shard and reduce over the joint
+axes, and a ``HierarchicalTransport`` splits each merge into a dense
+intra-host tier and a (typically sparse) inter-host tier with per-tier
+wire accounting.  The schemes —
 
   * average  (eq. 3): cross-worker mean of the worker versions;
   * delta    (eq. 8): cross-worker sum of the worker displacements;
@@ -45,36 +51,32 @@ from repro.core.schemes import SchemeResult
 from repro.engine import api, merge as merge_lib
 from repro.engine.network import GeometricDelayNetwork, NetworkModel
 from repro.kernels import ops
+from repro.topology import Topology
+from repro.topology import make_worker_mesh  # noqa: F401 — re-export; the
+# construction itself lives in repro.topology (the only module allowed to
+# build meshes — CI-pinned)
 
 
-def make_worker_mesh(m: int, axis: str = "workers") -> Mesh:
-    """1-D mesh over the first ``m`` available devices."""
-    if not axis:
-        raise ValueError("mesh axis name must be a non-empty string")
-    devices = jax.devices()
-    if m < 1 or m > len(devices):
-        raise ValueError(
-            f"need 1 <= M <= {len(devices)} devices for a worker mesh, "
-            f"got M={m} (hint: --xla_force_host_platform_device_count)")
-    return Mesh(np.asarray(devices[:m]), (axis,))
-
-
-def _validate_axis_names(mesh: Mesh, axis: str) -> None:
+def _validate_axis_names(mesh: Mesh, axes: tuple[str, ...]) -> None:
     if any(not name for name in mesh.axis_names):
         raise ValueError(
             f"mesh axis names must be non-empty, got {mesh.axis_names}")
-    if axis not in mesh.axis_names:
-        raise ValueError(
-            f"worker axis {axis!r} not in mesh axes {mesh.axis_names}")
+    for axis in axes:
+        if axis not in mesh.axis_names:
+            raise ValueError(
+                f"worker axis {axis!r} not in mesh axes {mesh.axis_names}")
 
 
-def _validate_mesh(mesh: Mesh, axis: str, m: int) -> None:
-    _validate_axis_names(mesh, axis)
+def _validate_mesh(mesh: Mesh, axes: tuple[str, ...], m: int) -> None:
+    _validate_axis_names(mesh, axes)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    if sizes[axis] != m:
+    have = 1
+    for axis in axes:
+        have *= sizes[axis]
+    if have != m:
         raise ValueError(
-            f"data has M={m} worker streams but mesh axis {axis!r} has "
-            f"{sizes[axis]} devices — one worker per device is required")
+            f"data has M={m} worker streams but mesh axes {axes!r} have "
+            f"{have} devices — one worker per device is required")
 
 
 def _local_window(w0: jax.Array, zwin: jax.Array, t0: jax.Array, *,
@@ -108,6 +110,7 @@ class MeshExecutor:
 
     def __init__(self, mesh: Mesh | None = None, axis: str = "workers",
                  network: NetworkModel | None = None, *,
+                 topology: Topology | None = None,
                  transport: comm.Transport | str | None = None,
                  use_pallas: bool = True, eval_every: int = 10,
                  vmem_budget_bytes: int | None = None,
@@ -115,13 +118,25 @@ class MeshExecutor:
                  publish_every: int = 1):
         if not axis:
             raise ValueError("worker axis name must be a non-empty string")
+        if topology is not None:
+            if mesh is not None:
+                raise ValueError(
+                    "pass mesh= or topology=, not both — a topology builds "
+                    "its own mesh")
+            # the topology owns the axis model: a flat topology is the 1-D
+            # worker mesh (bit-identical to the pre-topology path), a
+            # hierarchical one the 2-D (hosts, workers) grid
+            axis = topology.worker_axis
+            mesh = topology.make_mesh()
         if mesh is not None:
-            _validate_axis_names(mesh, axis)
+            _validate_axis_names(
+                mesh, topology.axes if topology is not None else (axis,))
         if publish_every < 1:
             raise ValueError(f"publish_every must be >= 1, "
                              f"got {publish_every}")
         self.mesh = mesh
         self.axis = axis
+        self.topology = topology
         self.network = network or GeometricDelayNetwork()
         self.transport = comm.get_transport(
             transport if transport is not None else "xla")
@@ -144,6 +159,24 @@ class MeshExecutor:
         # comm summary of the most recent run()/run_segment() (CommLog dict)
         self.last_comm: dict | None = None
 
+    # -- topology-derived axis model ----------------------------------------
+
+    @property
+    def _axes(self) -> tuple[str, ...]:
+        """Mesh axes the worker dimension shards over, outermost first."""
+        if self.topology is not None:
+            return self.topology.axes
+        return (self.axis,)
+
+    @property
+    def _spec(self):
+        """PartitionSpec entry / reduce-axis spec for the worker dim: the
+        bare axis name on a flat mesh, the (hosts, workers) tuple on a
+        hierarchical one (transports and strategies take either)."""
+        if self.topology is not None:
+            return self.topology.spec
+        return self.axis
+
     # -- comm-aware compile cache -------------------------------------------
 
     def _call_compiled(self, cache_key: tuple, build: Callable, *args):
@@ -160,12 +193,17 @@ class MeshExecutor:
         log.extend(records)
         return fn(*args)
 
-    def _merge_wire_bytes(self, cache_key: tuple) -> int:
-        """Total merge-tag wire bytes one execution of ``cache_key`` moves
-        per participant (for the network model's bandwidth charge)."""
+    def _merge_wire_by_tier(self, cache_key: tuple) -> dict:
+        """Merge-tag wire bytes one execution of ``cache_key`` moves per
+        participant, grouped by tier (None = untiered flat traffic, 0 =
+        intra-host, 1 = inter-host) for the network model's per-link-class
+        bandwidth charge."""
         _, records = self._compiled[cache_key]
-        return sum(r.wire_bytes * r.calls for r in records
-                   if r.tag == "merge")
+        out: dict = {}
+        for r in records:
+            if r.tag == "merge":
+                out[r.tier] = out.get(r.tier, 0) + r.wire_bytes * r.calls
+        return out
 
     # -- public API ---------------------------------------------------------
 
@@ -182,7 +220,7 @@ class MeshExecutor:
         m = data.shape[0]
         mesh = self.mesh if self.mesh is not None else make_worker_mesh(
             m, self.axis)
-        _validate_mesh(mesh, self.axis, m)
+        _validate_mesh(mesh, self._axes, m)
         mark = self.transport.log.mark()
         try:
             if scheme == "async_delta":
@@ -225,7 +263,7 @@ class MeshExecutor:
         if mesh is None:
             mesh = self.mesh if self.mesh is not None else make_worker_mesh(
                 m, self.axis)
-        _validate_mesh(mesh, self.axis, m)
+        _validate_mesh(mesh, self._axes, m)
         mark = self.transport.log.mark()
         try:
             if self.on_window is not None:
@@ -288,7 +326,8 @@ class MeshExecutor:
         across chunks instead of resetting it per program.  The host-side
         state representation carries a leading (M, ...) worker dim (the
         state is per-worker distinct, sharded over the axis)."""
-        axis = self.axis
+        axis = self._spec
+        axes = self._axes
         m = data.shape[0]
         n = data.shape[1]
         n_windows = n // tau
@@ -338,15 +377,17 @@ class MeshExecutor:
                 body, mesh,
                 in_specs=(P(), P(), P(axis), P(axis), P(axis)),
                 out_specs=(P(), P(), P(axis)),
-                axis_names=frozenset({axis}), check_vma=False))
+                axis_names=frozenset(axes), check_vma=False))
 
         w_final, curve, ms_out = self._call_compiled(
             cache_key, build, w0, jnp.asarray(t0, jnp.int32), merge_state,
             data, eval_data)
-        wire_per_window = self._merge_wire_bytes(cache_key) / max(
-            n_windows, 1)
-        wt = (self.network.window_ticks(tau)
-              + self.network.transfer_ticks(wire_per_window))
+        # each tier's measured per-window merge bytes is charged at that
+        # link class's bandwidth (slow-DCN tier 1 vs ICI tier 0)
+        wt = self.network.window_ticks(tau)
+        for tier, total in self._merge_wire_by_tier(cache_key).items():
+            wt += self.network.transfer_ticks(total / max(n_windows, 1),
+                                              tier=tier)
         ticks = jnp.arange(1, n_windows + 1, dtype=jnp.int32) * wt
         return SchemeResult(w_shared=w_final, wall_ticks=ticks,
                             distortion=curve), ms_out
@@ -356,7 +397,8 @@ class MeshExecutor:
     def _run_async(self, mesh: Mesh, w0, data, eval_data, *, tau: int,
                    eps0: float, decay: float,
                    key: jax.Array | None) -> SchemeResult:
-        axis = self.axis
+        axis = self._spec
+        axes = self._axes
         m, n, _ = data.shape
         key = jax.random.PRNGKey(0) if key is None else key
         max_rounds = n // tau + 2
@@ -428,7 +470,7 @@ class MeshExecutor:
             return jax.jit(compat.shard_map(
                 body, mesh, in_specs=(P(), P(axis), P(axis), P(axis)),
                 out_specs=(P(), P()),
-                axis_names=frozenset({axis}), check_vma=False))
+                axis_names=frozenset(axes), check_vma=False))
 
         w_final, curve = self._call_compiled(cache_key, build, w0, data,
                                              eval_data, done_at)

@@ -42,13 +42,17 @@ class NetworkModel:
         """Wall ticks a synchronous tau-window costs under this network."""
         raise NotImplementedError
 
-    def transfer_ticks(self, wire_bytes: float) -> int:
+    def transfer_ticks(self, wire_bytes: float, *,
+                       tier: int | None = None) -> int:
         """Extra wall ticks to move ``wire_bytes`` (a window's MEASURED
         merge traffic from the ``repro.comm`` transport records, not a
-        modeled figure).  The base model has infinite bandwidth — latency-
-        only models charge 0 — so existing tick accounting is unchanged
-        unless a model opts in via ``bytes_per_tick``."""
-        del wire_bytes
+        modeled figure).  ``tier`` is the link class the bytes crossed
+        (None = flat, 0 = intra-host ICI, 1 = inter-host DCN) so a model
+        can price the slow inter-host wire separately — the paper's Azure
+        regime.  The base model has infinite bandwidth on every tier —
+        latency-only models charge 0 — so existing tick accounting is
+        unchanged unless a model opts in via ``bytes_per_tick``."""
+        del wire_bytes, tier
         return 0
 
 
@@ -70,10 +74,15 @@ class FixedLatencyNetwork(NetworkModel):
 
     ``bytes_per_tick`` > 0 additionally charges ceil(wire/bandwidth) ticks
     per window for the bytes the transport layer measured (0 = the classic
-    latency-only model)."""
+    latency-only model).  ``dcn_bytes_per_tick`` > 0 prices the INTER-HOST
+    tier (tier 1 of a hierarchical merge) at its own — typically much
+    slower — bandwidth, reproducing the paper's cheap-ICI / slow-DCN
+    regime on the wall-tick axis; 0 means tier 1 rides ``bytes_per_tick``
+    like everything else."""
 
     latency_ticks: int = 1
     bytes_per_tick: int = 0
+    dcn_bytes_per_tick: int = 0
     name = "fixed"
 
     def __post_init__(self):
@@ -83,11 +92,17 @@ class FixedLatencyNetwork(NetworkModel):
         if self.bytes_per_tick < 0:
             raise ValueError(f"bytes_per_tick must be >= 0, "
                              f"got {self.bytes_per_tick}")
+        if self.dcn_bytes_per_tick < 0:
+            raise ValueError(f"dcn_bytes_per_tick must be >= 0, "
+                             f"got {self.dcn_bytes_per_tick}")
 
-    def transfer_ticks(self, wire_bytes):
-        if self.bytes_per_tick <= 0 or wire_bytes <= 0:
+    def transfer_ticks(self, wire_bytes, *, tier=None):
+        rate = self.bytes_per_tick
+        if tier == 1 and self.dcn_bytes_per_tick > 0:
+            rate = self.dcn_bytes_per_tick
+        if rate <= 0 or wire_bytes <= 0:
             return 0
-        return int(-(-wire_bytes // self.bytes_per_tick))
+        return int(-(-wire_bytes // rate))
 
     def round_lengths(self, key, m, max_rounds, tau):
         del key

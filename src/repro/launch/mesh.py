@@ -1,24 +1,16 @@
-"""Production mesh construction.
+"""Launch-layer mesh helpers — thin wrappers over ``repro.topology``.
 
-``make_production_mesh`` is a FUNCTION (never a module-level constant) so
-importing this module touches no jax device state; the dry-run sets
-XLA_FLAGS before first jax init to get 512 host devices.
+The hardcoded production shapes that used to live here are gone: every
+mesh in the repo is built by ``repro.topology`` (``Topology.make_mesh`` —
+pods are the host tier, each group's workers split (data, model)), and
+this module only keeps the historical import surface working.  Both
+helpers stay FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state; the dry-run sets XLA_FLAGS before
+first jax init to get 512 host devices.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.topology import make_host_mesh, make_production_mesh
 
-
-def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_host_mesh(*, data: int = 1, model: int = 1) -> jax.sharding.Mesh:
-    """Small mesh over whatever devices exist (tests / CPU smoke runs)."""
-    n = len(jax.devices())
-    data = min(data, n)
-    model = max(1, min(model, n // data))
-    return jax.make_mesh((data, model), ("data", "model"))
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -12,6 +12,15 @@ on any of the three backends:
         --executor mesh --scheme delta --workers 8 --tau 10 \
         [--network geometric --p-delay 0.5]
 
+Hierarchical VQ — the paper's two-tier platform (cheap intra-host, slow
+inter-host): ``--hosts 2`` splits the 8 workers into 2 host groups; tier-0
+merges ride the dense ``--transport`` inside each group, tier-1 crosses
+groups via ``--tier1-transport`` (sparse top-k by default) with per-tier
+measured wire bytes:
+
+    PYTHONPATH=src python -m repro.launch.train --mode vq --executor mesh \
+        --workers 8 --hosts 2 [--tier1-transport sparse --tier1-frac 0.03]
+
 Elastic VQ — the mesh run grows/shrinks its worker set mid-stream (a
 resharding event per ``--resize`` entry, not a restart); with ``--ckpt-dir``
 each resize checkpoints the shared prototypes, and ``--resume`` continues
@@ -47,8 +56,10 @@ from repro.training import steps as steps_lib
 def run_vq(args) -> int:
     """The paper's schemes behind the engine's Executor API."""
     from repro import comm
+    from repro.comm.sweep import acceptance_sparse_frac
     from repro.data import synthetic
     from repro.engine import get_executor, get_network
+    from repro.topology import Topology
 
     key = jax.random.PRNGKey(args.seed)
     kd, kw, ka = jax.random.split(key, 3)
@@ -63,16 +74,36 @@ def run_vq(args) -> int:
     elif args.network == "geometric":
         net_kw["p_delay"] = args.p_delay
     network = get_network(args.network, **net_kw)
-    if args.transport != "xla" and args.executor != "mesh":
+    if (args.transport != "xla" or args.hosts > 1) and args.executor != "mesh":
         # sim replays oracles on one device and threads move blobs in
         # process: neither has a collective for a transport to reroute
-        print(f"error: --transport {args.transport} needs --executor mesh "
-              f"(the sim/thread backends issue no collectives)")
+        print(f"error: --transport {args.transport} / --hosts {args.hosts} "
+              f"needs --executor mesh (the sim/thread backends issue no "
+              f"collectives)")
         return 2
     transport = comm.get_transport(
         args.transport,
         **({"frac": args.compress_frac} if args.transport == "sparse"
            else {}))
+    topology = None
+    if args.hosts > 1:
+        # hierarchical platform: the flat transport becomes tier 0 (dense
+        # intra-host), tier 1 crosses the host groups — sparse by default,
+        # at the k/kappa = 0.25 acceptance point unless --tier1-frac says
+        # otherwise (the paper's slow-DCN regime)
+        tier1_frac = (args.tier1_frac if args.tier1_frac is not None
+                      else acceptance_sparse_frac(args.kappa, args.dim))
+        try:
+            topology = Topology.from_spec(args.workers, hosts=args.hosts)
+            transport = comm.HierarchicalTransport(
+                tier0=transport, tier1=args.tier1_transport,
+                tier1_frac=tier1_frac if args.tier1_transport == "sparse"
+                else None,
+                host_axis=topology.host_axis,
+                worker_axis=topology.worker_axis)
+        except ValueError as e:  # bad hosts split / tier-1 frac
+            print(f"error: {e}")
+            return 2
     if args.resume and not args.resize:
         # only the elastic path has VQ resume state; a plain executor would
         # silently restart from scratch, which is not a resume
@@ -94,7 +125,7 @@ def run_vq(args) -> int:
         ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
         ex_name = "elastic"
         ex_kw = {"schedule": args.resize, "network": network,
-                 "transport": transport,
+                 "transport": transport, "topology": topology,
                  "checkpointer": ckpt, "resume": args.resume}
     elif args.executor == "thread":
         # real threads have no tick clock: tick-based NetworkModels don't
@@ -112,6 +143,7 @@ def run_vq(args) -> int:
         ex_kw = {"network": network}
         if args.executor == "mesh":
             ex_kw["transport"] = transport
+            ex_kw["topology"] = topology
     try:
         executor = get_executor(ex_name, **ex_kw)
     except ValueError as e:  # bad resize spec
@@ -121,6 +153,9 @@ def run_vq(args) -> int:
     print(f"executor={executor.name} scheme={args.scheme} "
           f"M={args.workers} tau={args.tau} network={args.network} "
           f"transport={transport.name} devices={len(jax.devices())}"
+          + (f" topology={topology.describe()}"
+             f" tier1={args.tier1_transport}" if topology is not None
+             else "")
           + (f" resize={args.resize}" if args.resize else ""))
     t0 = time.time()
     try:
@@ -154,6 +189,10 @@ def run_vq(args) -> int:
               f"{merge_b['wire_bytes']:,} B / logical "
               f"{merge_b['logical_bytes']:,} B per worker "
               f"({last_comm['calls']} collective calls, measured)")
+        for tier, t in sorted(merge_b.get("by_tier", {}).items()):
+            label = "intra-host" if tier == 0 else "inter-host"
+            print(f"  tier {tier} ({label}): wire {t['wire_bytes']:,} B "
+                  f"/ logical {t['logical_bytes']:,} B per worker")
     if ckpt is not None:
         ckpt.wait()
     return 0
@@ -200,6 +239,23 @@ def main(argv=None) -> int:
     ap.add_argument("--compress-frac", type=float, default=0.01,
                     help="sparse transport: fraction of entries each "
                          "worker ships per merge")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="hierarchical topology: split the M workers into "
+                         "this many host groups (M must divide evenly); "
+                         "merges then run dense intra-host (tier 0, the "
+                         "--transport choice) and --tier1-transport "
+                         "inter-host (tier 1), with per-tier wire "
+                         "accounting")
+    ap.add_argument("--tier1-transport", choices=("xla", "ring", "sparse"),
+                    default="sparse",
+                    help="--hosts > 1: the inter-host (DCN) tier's "
+                         "transport; sparse (top-k + error feedback) is "
+                         "the paper's slow-link answer, xla the dense "
+                         "bit-exact baseline")
+    ap.add_argument("--tier1-frac", type=float, default=None,
+                    help="sparse tier 1: keep-fraction of entries per "
+                         "inter-host merge (default: the k/kappa = 0.25 "
+                         "acceptance point)")
     ap.add_argument("--latency", type=int, default=1)
     ap.add_argument("--p-delay", type=float, default=0.5)
     ap.add_argument("--resize", default="",

@@ -1,0 +1,17 @@
+"""Platform topology layer — tiers of device groups, and every mesh.
+
+``Topology`` models the paper's hierarchical platform (cheap intra-host
+links, slow inter-host links) as a ``(hosts, workers_per_host)`` device
+grid; ``Topology.make_mesh`` is the only mesh constructor in ``src/repro``
+(CI-pinned).  See ``repro.comm.hier`` for the transport that rides the two
+tiers.
+"""
+
+from repro.topology.topology import (PRODUCTION_DATA, PRODUCTION_MODEL,
+                                     Topology, grid_mesh, make_host_mesh,
+                                     make_production_mesh, make_worker_mesh)
+
+__all__ = [
+    "Topology", "grid_mesh", "make_worker_mesh", "make_host_mesh",
+    "make_production_mesh", "PRODUCTION_DATA", "PRODUCTION_MODEL",
+]

@@ -1,0 +1,291 @@
+"""First-class platform topology — tiers of device groups.
+
+The paper's final scheme exists because the platform it ran on was
+HIERARCHICAL: intra-machine communication on Azure was cheap, inter-machine
+communication slow and synchronization costly.  Until now the engine
+modeled a flat ``workers`` axis; this module makes the two-tier shape a
+first-class object that every mesh-building layer consumes:
+
+  * ``Topology`` — a ``(hosts, workers_per_host)`` device grid.  Tier 0 is
+    the worker axis inside one host group (ICI-class links, dense merges);
+    tier 1 is the host axis across groups (DCN-class links, where the
+    sparse/delayed merges of Kamp et al.'s periodic-averaging shape and
+    Patra's staleness-tolerant analysis pay off).
+  * ``Topology.make_mesh()`` — the ONLY place in ``src/repro`` that turns
+    a device grid into a ``jax.sharding.Mesh`` (a CI test pins this: no
+    module outside ``src/repro/topology/`` constructs a mesh directly).
+    ``hosts == 1`` builds the 1-D flat mesh the engine has always used, so
+    the degenerate topology is bit-identical to the pre-topology path.
+  * constructors — ``detect()`` groups real ``jax.devices()`` by process
+    boundary (multi-host runs); ``simulate(hosts=H)`` partitions the
+    forced-host-platform devices into H groups (the CI story: a 2x4
+    hierarchical run on 8 forced CPU devices compiles the same SPMD
+    program an actual 2-host x 4-chip deployment runs).
+
+The LM production meshes live here too (``make_production_mesh`` /
+``make_host_mesh``): pods are the host tier and each group's workers split
+into (data, model) via ``make_mesh(model=...)`` — the old hardcoded
+``(16, 16)`` shapes in ``launch/mesh.py`` are gone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+#: TP width of one production worker group (the PR-1 era (16, 16) grid,
+#: now derived through ``Topology.make_mesh(model=...)`` instead of being
+#: hardcoded at the launch layer).
+PRODUCTION_MODEL = 16
+#: DP workers per pod in the production grid.
+PRODUCTION_DATA = 16
+
+
+def grid_mesh(devices: np.ndarray, axes: tuple[str, ...]) -> Mesh:
+    """The single raw ``Mesh`` constructor in ``src/repro``.
+
+    Everything else — worker meshes, hierarchical meshes, LM production
+    meshes — goes through a ``Topology`` (or this helper for legacy grid
+    shapes), so there is exactly one place where device order is decided.
+    """
+    devices = np.asarray(devices)
+    if devices.ndim != len(axes):
+        raise ValueError(
+            f"device grid rank {devices.ndim} != {len(axes)} axes {axes}")
+    if any(not name for name in axes):
+        raise ValueError(f"mesh axis names must be non-empty, got {axes}")
+    return Mesh(devices, axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Tiers of device groups: ``hosts`` groups of ``workers_per_host``.
+
+    ``device_grid`` is the (hosts, workers_per_host) object array of jax
+    devices; row h is host group h.  A valid topology PARTITIONS its
+    devices: every device appears exactly once (checked), and all groups
+    are the same size (rectangularity of the grid).
+    """
+
+    device_grid: np.ndarray
+    host_axis: str = "hosts"
+    worker_axis: str = "workers"
+
+    def __post_init__(self):
+        grid = np.asarray(self.device_grid, dtype=object)
+        object.__setattr__(self, "device_grid", grid)
+        if not self.host_axis or not self.worker_axis:
+            raise ValueError(
+                f"topology axis names must be non-empty, got "
+                f"({self.host_axis!r}, {self.worker_axis!r})")
+        if self.host_axis == self.worker_axis:
+            raise ValueError(
+                f"host and worker axes must be distinct, both are "
+                f"{self.host_axis!r}")
+        if grid.ndim != 2 or grid.size == 0:
+            raise ValueError(
+                f"device grid must be a non-empty (hosts, workers_per_host) "
+                f"array, got shape {grid.shape}")
+        ids = [getattr(d, "id", d) for d in grid.reshape(-1)]
+        if len(set(ids)) != len(ids):
+            raise ValueError(
+                "topology device groups must partition the devices — some "
+                "device appears in more than one slot")
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def hosts(self) -> int:
+        return int(self.device_grid.shape[0])
+
+    @property
+    def workers_per_host(self) -> int:
+        return int(self.device_grid.shape[1])
+
+    @property
+    def total_workers(self) -> int:
+        return int(self.device_grid.size)
+
+    @property
+    def is_flat(self) -> bool:
+        """One host group: today's flat worker axis, bit-identical."""
+        return self.hosts == 1
+
+    @property
+    def axes(self) -> tuple[str, ...]:
+        """Mesh axis names, outermost first."""
+        if self.is_flat:
+            return (self.worker_axis,)
+        return (self.host_axis, self.worker_axis)
+
+    @property
+    def spec(self):
+        """The ``PartitionSpec`` entry sharding a leading worker dim: the
+        bare worker axis when flat, the (host, worker) tuple when not."""
+        if self.is_flat:
+            return self.worker_axis
+        return (self.host_axis, self.worker_axis)
+
+    @property
+    def manual_axes(self) -> frozenset[str]:
+        return frozenset(self.axes)
+
+    def describe(self) -> str:
+        return f"{self.hosts}x{self.workers_per_host}"
+
+    def group_of(self, worker: int) -> int:
+        """Host group owning flat worker index ``worker`` (row-major)."""
+        if not 0 <= worker < self.total_workers:
+            raise ValueError(f"worker {worker} outside 0..{self.total_workers - 1}")
+        return worker // self.workers_per_host
+
+    # -- mesh construction ---------------------------------------------------
+
+    def make_mesh(self, *, model: int | None = None,
+                  data_axis: str = "data",
+                  model_axis: str = "model") -> Mesh:
+        """Build the device mesh for this topology.
+
+        ``model=None`` (the engine form): a flat topology builds the 1-D
+        ``(worker_axis,)`` mesh (bit-identical to the pre-topology path);
+        a hierarchical one builds the 2-D ``(host_axis, worker_axis)``
+        grid, row-major, so the joint collective group enumerates devices
+        in exactly the flat order — the property the dense tier-1 merge's
+        bit-for-bit acceptance test rides on.
+
+        ``model=k`` (the LM form, k >= 1): each host group's workers split
+        into ``(data, model)`` — a flat topology yields ``(data, model)``,
+        a multi-pod one ``(host_axis, data, model)``.  This is where the
+        production meshes come from (``make_production_mesh``).
+        """
+        if model is None:
+            if self.is_flat:
+                return grid_mesh(self.device_grid[0], (self.worker_axis,))
+            return grid_mesh(self.device_grid, (self.host_axis,
+                                                self.worker_axis))
+        if model < 1:
+            raise ValueError(f"model axis size must be >= 1, got {model}")
+        if self.workers_per_host % model:
+            raise ValueError(
+                f"model={model} must divide workers_per_host="
+                f"{self.workers_per_host}")
+        grid = self.device_grid.reshape(
+            self.hosts, self.workers_per_host // model, model)
+        if self.is_flat:
+            return grid_mesh(grid[0], (data_axis, model_axis))
+        return grid_mesh(grid, (self.host_axis, data_axis, model_axis))
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def flat(cls, m: int, *, worker_axis: str = "workers",
+             host_axis: str = "hosts") -> "Topology":
+        """1 x m: the classic flat worker axis over the first m devices."""
+        return cls.simulate(1, m, worker_axis=worker_axis,
+                            host_axis=host_axis)
+
+    @classmethod
+    def simulate(cls, hosts: int, workers_per_host: int, *,
+                 host_axis: str = "hosts",
+                 worker_axis: str = "workers") -> "Topology":
+        """Partition the available devices into ``hosts`` contiguous groups
+        of ``workers_per_host`` — the CI story for hierarchical runs on a
+        forced-host-platform device count."""
+        if hosts < 1 or workers_per_host < 1:
+            raise ValueError(
+                f"need hosts >= 1 and workers_per_host >= 1, got "
+                f"{hosts}x{workers_per_host}")
+        devices = jax.devices()
+        need = hosts * workers_per_host
+        if need > len(devices):
+            raise ValueError(
+                f"need 1 <= M <= {len(devices)} devices for a worker mesh, "
+                f"got M={need} ({hosts}x{workers_per_host}) "
+                f"(hint: --xla_force_host_platform_device_count)")
+        grid = np.asarray(devices[:need], dtype=object).reshape(
+            hosts, workers_per_host)
+        return cls(grid, host_axis=host_axis, worker_axis=worker_axis)
+
+    @classmethod
+    def detect(cls, *, host_axis: str = "hosts",
+               worker_axis: str = "workers") -> "Topology":
+        """Real platform shape: group ``jax.devices()`` by process index.
+
+        On a genuine multi-host mesh (``jax.distributed.initialize``) the
+        process boundary IS the host boundary; a single-process run (every
+        CPU/forced-host leg) detects as one flat group.  Ragged groups
+        (hosts with different device counts) are rejected — the engine's
+        one-worker-per-device data split needs a rectangular grid.
+        """
+        devices = jax.devices()
+        by_proc: dict[int, list] = {}
+        for d in devices:
+            by_proc.setdefault(getattr(d, "process_index", 0), []).append(d)
+        sizes = {len(v) for v in by_proc.values()}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"ragged host groups {sorted((k, len(v)) for k, v in by_proc.items())} "
+                f"— the topology needs the same device count per host")
+        rows = [by_proc[k] for k in sorted(by_proc)]
+        grid = np.asarray(rows, dtype=object)
+        return cls(grid, host_axis=host_axis, worker_axis=worker_axis)
+
+    @classmethod
+    def from_spec(cls, m: int, hosts: int | None = None, *,
+                  host_axis: str = "hosts",
+                  worker_axis: str = "workers") -> "Topology":
+        """``m`` total workers split over ``hosts`` groups (None/1 = flat).
+
+        The ``--hosts H`` CLI form: M must divide into H equal host groups
+        (the partition invariant), so ``--workers 8 --hosts 2`` is a 2x4
+        topology and ``--workers 8 --hosts 3`` is an error, not a silent
+        rounding.
+        """
+        if hosts is None or hosts == 1:
+            return cls.flat(m, worker_axis=worker_axis, host_axis=host_axis)
+        if hosts < 1:
+            raise ValueError(f"hosts must be >= 1, got {hosts}")
+        if m % hosts:
+            raise ValueError(
+                f"M={m} workers cannot split into {hosts} equal host "
+                f"groups — the topology must partition the workers")
+        return cls.simulate(hosts, m // hosts, host_axis=host_axis,
+                            worker_axis=worker_axis)
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers absorbed from launch/mesh.py and engine/mesh.py
+# ---------------------------------------------------------------------------
+
+def make_worker_mesh(m: int, axis: str = "workers") -> Mesh:
+    """1-D mesh over the first ``m`` available devices (the engine's flat
+    worker mesh, now built through ``Topology.flat``)."""
+    if not axis:
+        raise ValueError("mesh axis name must be a non-empty string")
+    return Topology.flat(m, worker_axis=axis).make_mesh()
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Production LM mesh from the platform topology: pods are the host
+    tier, each pod's workers split (data, model) = (16, 16).
+
+    A FUNCTION (never a module-level constant) so importing this module
+    touches no jax device state; the dry-run sets XLA_FLAGS before first
+    jax init to get 512 host devices.
+    """
+    topo = Topology.simulate(2 if multi_pod else 1,
+                             PRODUCTION_DATA * PRODUCTION_MODEL,
+                             host_axis="pod")
+    return topo.make_mesh(model=PRODUCTION_MODEL)
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1) -> Mesh:
+    """Small (data, model) mesh over whatever devices exist (tests / CPU
+    smoke runs), clamped like the old launch-layer helper."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return Topology.flat(data * model).make_mesh(model=model)

@@ -1,0 +1,490 @@
+"""Topology & hierarchical-merge tests (ISSUE 5).
+
+The acceptance bars, verbatim:
+
+  * a 2x4 hierarchical run with dense tier 1 matches the flat 8-worker
+    mesh oracle BIT-FOR-BIT;
+  * with sparse tier 1 at the k/kappa = 0.25 point, the measured
+    inter-host wire bytes (per-tier ``CommRecord``s) come in >= 4x below
+    dense while the final distortion stays within the PR-4 sparse bound;
+  * ``hosts=1`` collapses bit-identically to the flat path on BOTH CI
+    device legs; elastic host-group resize (2x4 -> 1x4 -> 2x4) ends
+    within rtol 1e-2 of the fixed oracle;
+  * no module outside ``src/repro/topology/`` constructs a mesh directly.
+"""
+
+from repro.xla_flags import force_host_devices
+
+force_host_devices(8)
+
+import pathlib  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro import comm  # noqa: E402
+from repro.comm import HierarchicalTransport, get_transport  # noqa: E402
+from repro.comm.sweep import acceptance_sparse_frac  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.engine import (ElasticMeshExecutor, InstantNetwork,  # noqa: E402
+                          MeshExecutor, ResizeSchedule, get_network)
+from repro.topology import (Topology, make_host_mesh,  # noqa: E402
+                            make_worker_mesh)
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+KEY = jax.random.PRNGKey(42)
+TAU = 10
+D, KAPPA = 8, 16
+FRAC_Q = acceptance_sparse_frac(KAPPA, D)  # k/kappa = 0.25
+
+
+def _setup(m, n=400):
+    kd, kw = jax.random.split(KEY)
+    data = synthetic.replicate_stream(kd, m, n=n, d=D)
+    eval_data = data[:, :200]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, D), KAPPA)
+    return data, eval_data, w0
+
+
+def _hier_transport(topo, tier1="sparse", frac=FRAC_Q):
+    return HierarchicalTransport(
+        tier0="xla", tier1=tier1,
+        tier1_frac=frac if tier1 == "sparse" else None,
+        host_axis=topo.host_axis, worker_axis=topo.worker_axis)
+
+
+# ---------------------------------------------------------------------------
+# topology invariants
+# ---------------------------------------------------------------------------
+
+def test_topology_partitions_devices_exactly_once():
+    n = len(jax.devices())
+    topo = Topology.from_spec(n, hosts=None)
+    flat = list(topo.device_grid.reshape(-1))
+    assert len({d.id for d in flat}) == n  # every device exactly once
+    assert topo.total_workers == n
+    # a grid that repeats a device is rejected
+    dup = np.asarray([[jax.devices()[0], jax.devices()[0]]], dtype=object)
+    with pytest.raises(ValueError, match="partition"):
+        Topology(dup)
+
+
+def test_topology_shape_and_axis_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        Topology.flat(1, worker_axis="")
+    with pytest.raises(ValueError, match="distinct"):
+        Topology.simulate(1, 1, host_axis="w", worker_axis="w")
+    with pytest.raises(ValueError, match="hosts >= 1"):
+        Topology.simulate(0, 2)
+    with pytest.raises(ValueError, match="devices"):
+        Topology.simulate(2, len(jax.devices()))
+    with pytest.raises(ValueError, match="equal host groups"):
+        Topology.from_spec(8, hosts=3)
+    with pytest.raises(ValueError, match="hosts must be >= 1"):
+        Topology.from_spec(8, hosts=-2)
+
+
+@pytest.mark.devices(8)
+def test_topology_shapes_and_specs():
+    topo = Topology.from_spec(8, hosts=2)
+    assert (topo.hosts, topo.workers_per_host, topo.total_workers) == (2, 4, 8)
+    assert not topo.is_flat
+    assert topo.axes == ("hosts", "workers")
+    assert topo.spec == ("hosts", "workers")
+    assert topo.describe() == "2x4"
+    assert topo.group_of(0) == 0 and topo.group_of(7) == 1
+    with pytest.raises(ValueError, match="outside"):
+        topo.group_of(8)
+    mesh = topo.make_mesh()
+    assert mesh.devices.shape == (2, 4)
+    assert mesh.axis_names == ("hosts", "workers")
+
+    flat = Topology.from_spec(4, hosts=1)
+    assert flat.is_flat and flat.spec == "workers"
+    assert flat.make_mesh().devices.shape == (4,)
+
+
+@pytest.mark.devices(8)
+def test_topology_model_axis_mesh_forms():
+    """The LM production form: each group's workers split (data, model)."""
+    topo = Topology.flat(8)
+    mesh = topo.make_mesh(model=2)
+    assert mesh.devices.shape == (4, 2)
+    assert mesh.axis_names == ("data", "model")
+    pods = Topology.simulate(2, 4, host_axis="pod")
+    mesh3 = pods.make_mesh(model=2)
+    assert mesh3.devices.shape == (2, 2, 2)
+    assert mesh3.axis_names == ("pod", "data", "model")
+    with pytest.raises(ValueError, match="divide"):
+        topo.make_mesh(model=3)
+
+
+def test_topology_detect_single_process_is_flat():
+    topo = Topology.detect()
+    assert topo.is_flat
+    assert topo.total_workers == len(jax.devices())
+
+
+def test_make_worker_mesh_wrapper_still_validates():
+    """The engine re-export keeps the historical error surface."""
+    with pytest.raises(ValueError, match="non-empty"):
+        make_worker_mesh(2, axis="")
+    with pytest.raises(ValueError, match="devices"):
+        make_worker_mesh(len(jax.devices()) + 1)
+    mesh = make_host_mesh(data=2, model=1)
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_no_mesh_construction_outside_topology():
+    """CI pin: ``repro.topology`` is the only module in ``src/repro`` that
+    builds a ``jax.sharding.Mesh`` (or calls ``jax.make_mesh``) — every
+    other layer goes through a ``Topology``."""
+    root = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+    pat = re.compile(r"\bMesh\(|jax\.make_mesh\s*\(")
+    offenders = []
+    for path in sorted(root.rglob("*.py")):
+        if "topology" in path.parts:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{path.relative_to(root)}:{lineno}: "
+                                 f"{line.strip()}")
+    assert not offenders, (
+        "raw mesh construction outside src/repro/topology/ — build it "
+        "from a Topology instead:\n" + "\n".join(offenders))
+
+
+# ---------------------------------------------------------------------------
+# hierarchical transport semantics
+# ---------------------------------------------------------------------------
+
+def test_hier_transport_factory_and_validation():
+    t = get_transport("hier", tier1_frac=0.25)
+    assert t.name == "hier" and t.stateful and t.tier1_frac == 0.25
+    dense = get_transport("hier", tier1="xla")
+    assert not dense.stateful and dense.tier1_frac is None
+    with pytest.raises(ValueError, match="distinct"):
+        HierarchicalTransport(host_axis="w", worker_axis="w")
+    with pytest.raises(ValueError, match="one place only"):
+        HierarchicalTransport(tier1=get_transport("sparse", frac=0.5),
+                              tier1_frac=0.25)
+    with pytest.raises(ValueError, match="unknown reduce op"):
+        t.all_reduce(jnp.zeros(3), ("hosts", "workers"), op="max")
+    with pytest.raises(ValueError, match="reduces over"):
+        t.all_reduce(jnp.zeros(3), "pods")
+
+
+def test_hier_transport_state_tree():
+    t = get_transport("hier", tier1_frac=FRAC_Q)
+    st = t.init_state(jnp.zeros((4, 2)))
+    assert set(st) == {"t0", "t1"}
+    assert st["t0"] is None and st["t1"].shape == (4, 2)
+    assert get_transport("hier", tier1="xla").init_state(
+        jnp.zeros((4, 2))) is None
+
+
+@pytest.mark.devices(8)
+def test_hier_per_tier_wire_closed_form():
+    """Per-tier CommRecords carry the closed-form two-tier schedule: tier 0
+    the dense ring inside a 4-worker group, tier 1 across the 2 hosts —
+    dense ring for xla, (hosts-1)*k*8 for sparse."""
+    m, n = 8, 400
+    n_windows = n // TAU
+    logical = 4 * KAPPA * D
+    data, eval_data, w0 = _setup(m)
+    topo = Topology.from_spec(m, hosts=2)
+
+    ex = MeshExecutor(topology=topo, network=InstantNetwork(),
+                      transport=_hier_transport(topo, tier1="xla"))
+    ex.run("delta", w0, data, eval_data, tau=TAU)
+    tiers = ex.last_comm["by_tag"]["merge"]["by_tier"]
+    assert tiers[0]["wire_bytes"] == n_windows * comm.ring_wire_bytes(
+        logical, 4)
+    assert tiers[1]["wire_bytes"] == n_windows * comm.ring_wire_bytes(
+        logical, 2)
+
+    exs = MeshExecutor(topology=topo, network=InstantNetwork(),
+                       transport=_hier_transport(topo))
+    exs.run("delta", w0, data, eval_data, tau=TAU)
+    tiers_s = exs.last_comm["by_tag"]["merge"]["by_tier"]
+    k = comm.topk_count(KAPPA * D, FRAC_Q)
+    assert tiers_s[0]["wire_bytes"] == tiers[0]["wire_bytes"]
+    assert tiers_s[1]["wire_bytes"] == n_windows * (2 - 1) * k * 8
+    # the acceptance inequality, measured per-tier
+    assert tiers[1]["wire_bytes"] / tiers_s[1]["wire_bytes"] >= 4.0
+
+
+@pytest.mark.devices(8)
+@pytest.mark.parametrize("scheme", ["average", "delta", "async_delta"])
+def test_hier_dense_tier1_bitmatches_flat_oracle(scheme):
+    """Acceptance: 2x4 hierarchical with dense tier 1 == flat 8-worker mesh
+    BIT-FOR-BIT (the joint-axis group enumerates devices in flat order)."""
+    data, eval_data, w0 = _setup(8)
+    key = jax.random.fold_in(KEY, 9)
+    flat = MeshExecutor(network=InstantNetwork()).run(
+        scheme, w0, data, eval_data, tau=TAU, key=key)
+    topo = Topology.from_spec(8, hosts=2)
+    hier = MeshExecutor(topology=topo, network=InstantNetwork(),
+                        transport=_hier_transport(topo, tier1="xla")).run(
+        scheme, w0, data, eval_data, tau=TAU, key=key)
+    np.testing.assert_array_equal(np.asarray(flat.w_shared),
+                                  np.asarray(hier.w_shared))
+    np.testing.assert_array_equal(np.asarray(flat.distortion),
+                                  np.asarray(hier.distortion))
+
+
+@pytest.mark.parametrize("tier1", ["xla", "sparse"])
+def test_hosts_one_collapses_bit_identically(tier1):
+    """Degenerate hosts=1 runs the flat path bit-for-bit on BOTH CI device
+    legs (m = all available devices, so the 1-device leg runs m=1)."""
+    m = min(8, len(jax.devices()))
+    data, eval_data, w0 = _setup(m)
+    flat = MeshExecutor(network=InstantNetwork()).run(
+        "delta", w0, data, eval_data, tau=TAU)
+    topo = Topology.from_spec(m, hosts=1)
+    ex = MeshExecutor(topology=topo, network=InstantNetwork(),
+                      transport=_hier_transport(topo, tier1=tier1))
+    hier = ex.run("delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_array_equal(np.asarray(flat.w_shared),
+                                  np.asarray(hier.w_shared))
+    np.testing.assert_array_equal(np.asarray(flat.distortion),
+                                  np.asarray(hier.distortion))
+    # tier-1 never ran: every merge record is tier 0, no inter-host wire
+    tiers = ex.last_comm["by_tag"]["merge"].get("by_tier", {})
+    assert 1 not in tiers
+
+
+@pytest.mark.devices(8)
+@pytest.mark.parametrize("scheme", ["delta", "async_delta"])
+def test_hier_sparse_tier1_distortion_bound(scheme):
+    """Acceptance: sparse tier 1 at k/kappa = 0.25 stays within the PR-4
+    sparse bound (25% of dense final distortion) and still converges."""
+    data, eval_data, w0 = _setup(8)
+    key = jax.random.fold_in(KEY, 9)
+    flat = MeshExecutor(network=InstantNetwork()).run(
+        scheme, w0, data, eval_data, tau=TAU, key=key)
+    topo = Topology.from_spec(8, hosts=2)
+    hier = MeshExecutor(topology=topo, network=InstantNetwork(),
+                        transport=_hier_transport(topo)).run(
+        scheme, w0, data, eval_data, tau=TAU, key=key)
+    curve = np.asarray(hier.distortion)
+    assert np.all(np.isfinite(curve))
+    assert curve[-1] < curve[0]
+    gap = curve[-1] / float(flat.distortion[-1]) - 1.0
+    assert abs(gap) < 0.25, f"hier sparse final C off flat by {gap:+.3f}"
+
+
+@pytest.mark.devices(8)
+def test_hier_sparse_full_density_matches_dense():
+    """tier1_frac=1.0 keeps everything: only float-sum order can differ."""
+    data, eval_data, w0 = _setup(8)
+    topo = Topology.from_spec(8, hosts=2)
+    dense = MeshExecutor(topology=topo, network=InstantNetwork(),
+                         transport=_hier_transport(topo, tier1="xla")).run(
+        "delta", w0, data, eval_data, tau=TAU)
+    full = MeshExecutor(topology=topo, network=InstantNetwork(),
+                        transport=_hier_transport(topo, frac=1.0)).run(
+        "delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_allclose(np.asarray(dense.distortion),
+                               np.asarray(full.distortion),
+                               rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# per-tier network charging
+# ---------------------------------------------------------------------------
+
+def test_fixed_network_charges_dcn_tier_separately():
+    net = get_network("fixed", latency_ticks=0, bytes_per_tick=1000,
+                      dcn_bytes_per_tick=10)
+    assert net.transfer_ticks(1000) == 1                # flat: ICI rate
+    assert net.transfer_ticks(1000, tier=0) == 1        # intra-host
+    assert net.transfer_ticks(1000, tier=1) == 100      # slow DCN
+    # without a DCN rate, tier 1 rides the common bandwidth
+    flat = get_network("fixed", latency_ticks=0, bytes_per_tick=1000)
+    assert flat.transfer_ticks(1000, tier=1) == 1
+    with pytest.raises(ValueError, match="dcn_bytes_per_tick"):
+        get_network("fixed", dcn_bytes_per_tick=-1)
+
+
+@pytest.mark.devices(8)
+def test_slow_dcn_stretches_hier_wall_clock():
+    """Same merges, same curve values — but the sparse tier-1 wire on a
+    slow DCN still costs fewer ticks than the dense tier-1 wire would:
+    the paper's reason the final scheme exists, on the wall-tick axis."""
+    data, eval_data, w0 = _setup(8)
+    topo = Topology.from_spec(8, hosts=2)
+    logical = 4 * KAPPA * D
+    dcn = comm.ring_wire_bytes(logical, 2)  # dense tier-1 bytes per window
+    net = get_network("fixed", latency_ticks=0, dcn_bytes_per_tick=dcn)
+    free = MeshExecutor(topology=topo, network=InstantNetwork(),
+                        transport=_hier_transport(topo, tier1="xla")).run(
+        "delta", w0, data, eval_data, tau=TAU)
+    dense = MeshExecutor(topology=topo, network=net,
+                         transport=_hier_transport(topo, tier1="xla")).run(
+        "delta", w0, data, eval_data, tau=TAU)
+    sparse = MeshExecutor(topology=topo, network=net,
+                          transport=_hier_transport(topo)).run(
+        "delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_allclose(np.asarray(free.distortion),
+                               np.asarray(dense.distortion), rtol=1e-6)
+    assert int(dense.wall_ticks[0]) == TAU + 1   # 1 full DCN tick per window
+    assert int(sparse.wall_ticks[0]) == TAU + 1  # ceil: tiny wire, 1 tick
+    assert int(dense.wall_ticks[-1]) > int(free.wall_ticks[-1])
+
+
+# ---------------------------------------------------------------------------
+# multi-host elasticity: whole host groups
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(8)
+def test_elastic_host_group_resize_matches_oracle():
+    """Acceptance: 2x4 -> 1x4 -> 2x4 (a host group leaves and returns) ends
+    within rtol 1e-2 of the fixed flat oracle on the same sample budget."""
+    m, n = 8, 800
+    data, eval_data, w0 = _setup(m, n=n)
+    oracle = MeshExecutor(network=InstantNetwork()).run(
+        "delta", w0, data, eval_data, tau=TAU)
+    n_windows = n // TAU
+    topo = Topology.from_spec(m, hosts=2)
+    ex = ElasticMeshExecutor(
+        ResizeSchedule([(n_windows // 3, 4), (2 * n_windows // 3, 8)]),
+        network=InstantNetwork(), topology=topo,
+        transport=_hier_transport(topo))
+    res = ex.run("delta", w0, data, eval_data, tau=TAU)
+    assert [(e.old_m, e.new_m) for e in ex.resize_events] == [(8, 4), (4, 8)]
+    np.testing.assert_allclose(float(res.distortion[-1]),
+                               float(oracle.distortion[-1]), rtol=1e-2)
+    # the late-delta upload crossed host groups: tier-1 accounting
+    late = ex.last_comm["by_tag"]["late_delta"]
+    assert late["wire_bytes"] == 4 * KAPPA * D
+    assert late["by_tier"][1]["wire_bytes"] == 4 * KAPPA * D
+
+
+@pytest.mark.devices(8)
+def test_elastic_hier_clamps_to_whole_host_groups():
+    """A resize target that is not a whole number of host groups rounds
+    down to one (workers_per_host stays fixed — hosts leave, not chips)."""
+    data, eval_data, w0 = _setup(8)
+    topo = Topology.from_spec(8, hosts=2)
+    ex = ElasticMeshExecutor(ResizeSchedule([(2, 6)]),
+                             network=InstantNetwork(), topology=topo,
+                             transport=_hier_transport(topo))
+    ex.run("delta", w0, data, eval_data, tau=TAU)
+    assert [(e.old_m, e.new_m) for e in ex.resize_events] == [(8, 4)]
+
+
+# ---------------------------------------------------------------------------
+# regression-gate units (benchmarks/check_regression.py, hier suite)
+# ---------------------------------------------------------------------------
+
+def _hier_doc(inter_wire=640, reduction=16.0, bitmatch=True, parity=1.0,
+              final_c=0.02):
+    def cell(variant, tier0, tier1, **kw):
+        c = {"kind": "cell", "scheme": "delta", "variant": variant,
+             "hosts": 2 if variant != "flat" else 1,
+             "workers_per_host": 4 if variant != "flat" else 8,
+             "m": 8, "n": 200, "d": 8, "kappa": 16, "tau": 10,
+             "tier1_frac": FRAC_Q if variant == "hier_sparse" else None,
+             "wall_s": 0.01, "merge_wire_bytes": tier0 + tier1,
+             "tier0_wire_bytes": tier0, "tier1_wire_bytes": tier1,
+             "final_C": final_c}
+        c.update(kw)
+        return c
+    return {"suite": "hier", "results": [
+        cell("flat", 0, 0),
+        cell("hier_dense", 15360, 10240, bitmatch_flat=bitmatch),
+        cell("hier_sparse", 15360, inter_wire, bitmatch_flat=False),
+        {"kind": "inter_reduction", "m": 8, "hosts": 2, "kappa": 16,
+         "d": 8, "tier1_frac": FRAC_Q, "reduction": reduction,
+         "dense_bitmatch": bitmatch},
+        {"kind": "hier_parity", "m": 8,
+         "parity": parity if isinstance(parity, dict) else
+         {"average": parity, "delta": parity, "async_delta": parity}},
+    ]}
+
+
+def test_hier_gate_passes_identical():
+    from benchmarks.check_regression import check_hier
+    ok, msgs = check_hier(_hier_doc(), _hier_doc())
+    assert ok, msgs
+
+
+def test_hier_gate_fails_on_tier_wire_drift():
+    from benchmarks.check_regression import check_hier
+    ok, msgs = check_hier(_hier_doc(), _hier_doc(inter_wire=1280))
+    assert not ok and any("tier1_wire_bytes drifted" in m for m in msgs)
+
+
+def test_hier_gate_fails_below_inter_floor():
+    from benchmarks.check_regression import check_hier
+    ok, msgs = check_hier(_hier_doc(), _hier_doc(reduction=3.0))
+    assert not ok and any("below the 4x bar" in m for m in msgs)
+
+
+def test_hier_gate_fails_on_lost_bitmatch():
+    from benchmarks.check_regression import check_hier
+    ok, msgs = check_hier(_hier_doc(), _hier_doc(bitmatch=False))
+    assert not ok and any("bit-match" in m for m in msgs)
+
+
+def test_hier_gate_fails_on_parity_regression_all_legs():
+    from benchmarks.check_regression import check_hier
+    ok, msgs = check_hier(_hier_doc(parity=1.0), _hier_doc(parity=1.5))
+    assert not ok and any("wall parity" in m for m in msgs)
+    # single-leg noise does not flip the min-over-schemes statistic
+    noisy = _hier_doc(parity={"average": 2.0, "delta": 1.0,
+                              "async_delta": 1.0})
+    ok, msgs = check_hier(_hier_doc(parity=1.0), noisy)
+    assert ok, msgs
+
+
+def test_hier_gate_rejects_config_mismatch_and_lost_cells():
+    from benchmarks.check_regression import check_hier
+    fresh = _hier_doc()
+    fresh["results"][1]["kappa"] = 32
+    with pytest.raises(ValueError, match="regenerate"):
+        check_hier(_hier_doc(), fresh)
+    lost = _hier_doc()
+    lost["results"] = [r for r in lost["results"]
+                       if r.get("variant") != "hier_sparse"]
+    with pytest.raises(ValueError, match="missing baseline cells"):
+        check_hier(_hier_doc(), lost)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(8)
+def test_train_cli_hosts_smoke(capsys):
+    from repro.launch import train
+    rc = train.main(["--mode", "vq", "--executor", "mesh", "--scheme",
+                     "delta", "--workers", "8", "--hosts", "2",
+                     "--points", "100", "--kappa", "8", "--dim", "4"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "topology=2x4" in out and "transport=hier" in out
+    assert "tier 0 (intra-host)" in out and "tier 1 (inter-host)" in out
+
+
+def test_train_cli_hosts_validation(capsys):
+    from repro.launch import train
+    rc = train.main(["--mode", "vq", "--executor", "mesh", "--workers",
+                     "8", "--hosts", "3", "--points", "50"])
+    assert rc == 2
+    assert "equal host groups" in capsys.readouterr().out
+    rc = train.main(["--mode", "vq", "--executor", "sim", "--workers",
+                     "8", "--hosts", "2", "--points", "50"])
+    assert rc == 2
+    assert "needs --executor mesh" in capsys.readouterr().out
+    rc = train.main(["--mode", "vq", "--executor", "mesh", "--workers",
+                     "8", "--hosts", "2", "--tier1-frac", "2.0",
+                     "--points", "50"])
+    assert rc == 2
+    assert "compression frac" in capsys.readouterr().out
