@@ -7,12 +7,17 @@
 #   make bench-serve   — serving suite (lookup/service/hot-swap) -> BENCH_serve.json
 #   make bench-comm    — scheme x transport wall + measured wire bytes -> BENCH_comm.json
 #   make bench-hier    — flat vs hierarchical (2x4) wall + per-tier wire bytes -> BENCH_hier.json
+#   make bench-obs     — instrumented-vs-bare tracing overhead + traced 2-host
+#                        run -> BENCH_obs.json (the <=1.03x obs gate input)
 #   make serve-smoke   — quantization service end to end: live elastic trainer
 #                        hot-swapping codebooks under open-loop load
+#   make trace-smoke   — 2-host traced + metered train run, then the trace
+#                        invariant checker (repro.obs.check) on the export
 #   make ci-local      — mirror the full CI matrix locally (lint, tier-1 under
 #                        1 AND 8 forced devices, fresh engine + serve benches +
-#                        the regression gates) so CI failures reproduce without
-#                        pushing
+#                        the regression gates, the obs overhead gate, and the
+#                        trace-invariant smoke) so CI failures reproduce
+#                        without pushing
 #   make example-mesh  — the 8-device mesh demo against the sim oracles
 #   make example-elastic — the 8->4->8 elastic resharding demo
 #   make example-serve — the train-while-serve demo (examples/serve_vq.py)
@@ -22,8 +27,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
 
 .PHONY: test lint bench-smoke bench-engine bench-elastic bench-serve \
-        bench-comm bench-hier serve-smoke ci-local example-mesh \
-        example-elastic example-serve
+        bench-comm bench-hier bench-obs serve-smoke trace-smoke ci-local \
+        example-mesh example-elastic example-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -54,8 +59,21 @@ bench-comm:
 bench-hier:
 	$(PY) -m benchmarks.run --suite hier --quick
 
+bench-obs:
+	$(PY) -m benchmarks.run --suite obs --quick
+
 serve-smoke:
 	$(PY) -m repro.launch.serve --mode vq --smoke --train-publish
+
+# the checker's runpy RuntimeWarning ('repro.obs.check found in
+# sys.modules') is harmless: the package __init__ imports the submodule
+# before -m re-executes it as __main__
+trace-smoke:
+	$(PY) -m repro.launch.train --mode vq --executor mesh --scheme delta \
+		--workers 8 --hosts 2 --points 400 \
+		--trace ci.trace.json --metrics ci.metrics.jsonl
+	$(PY) -m repro.obs.check ci.trace.json --expect-merge-tiers 0,1 \
+		--expect-counter codebook_divergence --expect-counter distortion
 
 ci-local: lint
 	XLA_FLAGS=--xla_force_host_platform_device_count=1 $(PY) -m pytest -q
@@ -75,6 +93,10 @@ ci-local: lint
 	$(PY) -m benchmarks.run --suite hier --quick --out BENCH_hier.fresh.json
 	$(PY) -m benchmarks.check_regression \
 		--baseline BENCH_hier.json --fresh BENCH_hier.fresh.json
+	$(PY) -m benchmarks.run --suite obs --quick --out BENCH_obs.fresh.json
+	$(PY) -m benchmarks.check_regression \
+		--baseline BENCH_obs.json --fresh BENCH_obs.fresh.json
+	$(MAKE) trace-smoke
 	$(PY) -m benchmarks.run --suite elastic --quick --out BENCH_elastic.fresh.json
 
 example-mesh:

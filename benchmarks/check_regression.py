@@ -59,6 +59,25 @@ committed ``BENCH_comm.json`` and FAILS when:
     by more than ``--max-ratio-regression``; or any final distortion
     diverges beyond ``--curve-rtol``.
 
+**obs**: diffs a fresh ``--suite obs --quick`` output against the
+committed ``BENCH_obs.json`` and FAILS when:
+
+  * any scheme's live-instrumentation overhead (tracer + metrics enabled
+    but unexported, over the bare executor on the same box — the machine
+    divides out of the on/off ratio) exceeds ``--max-obs-overhead``
+    (default 1.03, the <3%% acceptance bar; absolute, not
+    baseline-relative); or
+  * the traced 2-host hierarchical run no longer passes the
+    ``repro.obs.check`` invariants with tier-0 AND tier-1 merge spans and
+    the ``codebook_divergence`` counter present (functional,
+    machine-independent).
+
+All suites additionally WARN (never fail) when the baseline's recorded
+per-iteration ``wall_samples`` spread exceeds the regression threshold:
+a ratio FAIL against such a baseline is as likely noise as regression,
+so the fix is regenerating the baseline on a quieter box, not widening
+the gate.
+
 Exit codes: 0 pass, 1 regression, 2 usage/config mismatch (e.g. the fresh
 run used a different n/tau/d than the baseline — the comparison would be
 meaningless, so that is an error, not a pass).
@@ -381,6 +400,97 @@ def check_hier(baseline: dict, fresh: dict, *,
     return ok and red_ok and par_ok, msgs + red_msgs + par_msgs
 
 
+def check_obs(baseline: dict, fresh: dict, *,
+              max_overhead: float = 1.03) -> tuple[bool, list[str]]:
+    """Obs-suite gate; same contract as ``check``.
+
+    The overhead bar is ABSOLUTE (the acceptance criterion: live
+    instrumentation costs < 3% wall), measured fresh on one box — the
+    machine divides out of the on/off ratio, so the baseline pins the
+    config and records the noise floor rather than anchoring a ratio.
+    The trace leg is functional and machine-independent: the fresh
+    traced hierarchical run must pass the invariant checker.
+    """
+    msgs: list[str] = []
+    ok = True
+    b_over = {r["scheme"]: r for r in baseline.get("results", [])
+              if r.get("kind") == "overhead"}
+    f_over = {r["scheme"]: r for r in fresh.get("results", [])
+              if r.get("kind") == "overhead"}
+    if not b_over or not f_over:
+        raise ValueError("obs suite needs 'overhead' records in both "
+                         "baseline and fresh output — regenerate with "
+                         "benchmarks.run --suite obs")
+    missing = sorted(set(b_over) - set(f_over))
+    if missing:
+        raise ValueError(f"fresh obs run is missing baseline overhead "
+                         f"legs {missing} — the suite lost coverage")
+    for scheme in sorted(f_over):
+        f = f_over[scheme]
+        b = b_over.get(scheme)
+        if b is not None:
+            cfg = ("m", "n", "d", "kappa", "tau")
+            if tuple(b.get(k) for k in cfg) != tuple(f.get(k) for k in cfg):
+                raise ValueError(
+                    f"obs overhead [{scheme}]: baseline config != fresh — "
+                    f"regenerate the baseline (benchmarks.run --suite obs) "
+                    f"instead of comparing different runs")
+        line = (f"obs overhead [{scheme}]: instrumented/bare wall "
+                f"{f['overhead']:.3f}x (bar <= {max_overhead:.2f}x)")
+        if f["overhead"] > max_overhead:
+            ok = False
+            msgs.append(f"FAIL {line}")
+        else:
+            msgs.append(f"ok   {line}")
+
+    tr = _serve_rec(fresh, "trace")
+    if tr is None:
+        ok = False
+        msgs.append("FAIL fresh obs run has no 'trace' record")
+    elif not tr.get("trace_ok", False):
+        ok = False
+        msgs.append("FAIL traced hierarchical run violated trace "
+                    "invariants: "
+                    + "; ".join(tr.get("errors", ["(no detail)"])[:3]))
+    else:
+        msgs.append(f"ok   traced {tr.get('hosts')}-host run: "
+                    f"{tr.get('n_spans')} spans, tier-0/1 merge spans + "
+                    f"divergence counter present")
+    return ok, msgs
+
+
+def _sample_tag(rec: dict) -> str:
+    """Short human tag for a BENCH record carrying raw samples."""
+    for keys in (("executor", "m"), ("kind", "scheme"),
+                 ("scheme", "transport"), ("scheme", "variant"),
+                 ("variant",), ("kind",)):
+        if all(rec.get(k) is not None for k in keys):
+            return "/".join(str(rec[k]) for k in keys)
+    return "record"
+
+
+def variance_warnings(doc: dict, *, threshold: float,
+                      label: str = "baseline") -> list[str]:
+    """WARN when recorded per-iteration wall samples spread wider than the
+    regression threshold — a ratio FAIL against such a baseline is as
+    likely noise as regression (regenerate the baseline on a quieter box
+    rather than widening the gate).  Never fails the run."""
+    warns: list[str] = []
+    for rec in doc.get("results", []):
+        for fld in ("wall_samples", "wall_samples_off", "wall_samples_on"):
+            s = rec.get(fld)
+            if not isinstance(s, list) or len(s) < 2 or min(s) <= 0:
+                continue
+            spread = max(s) / min(s) - 1.0
+            if spread > threshold:
+                warns.append(
+                    f"warn {label} {_sample_tag(rec)}: {fld} spread "
+                    f"{spread:.0%} exceeds the {threshold:.0%} regression "
+                    f"threshold — wall-ratio gates on this record are "
+                    f"noise-limited")
+    return warns
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_engine.json")
@@ -395,6 +505,10 @@ def main(argv=None) -> int:
     ap.add_argument("--min-sparse-reduction", type=float, default=4.0,
                     help="comm suite: floor for the sparse-vs-dense merge "
                          "wire-byte reduction (4x at k/kappa = 0.25)")
+    ap.add_argument("--max-obs-overhead", type=float, default=1.03,
+                    help="obs suite: absolute ceiling for the live-"
+                         "instrumentation wall overhead (1.03 = the <3%% "
+                         "acceptance bar)")
     args = ap.parse_args(argv)
     try:
         with open(args.baseline) as fh:
@@ -429,6 +543,9 @@ def main(argv=None) -> int:
                 max_ratio_regression=args.max_ratio_regression,
                 min_sparse_reduction=args.min_sparse_reduction,
                 curve_rtol=args.curve_rtol)
+        elif suites[0] == "obs":
+            ok, msgs = check_obs(baseline, fresh,
+                                 max_overhead=args.max_obs_overhead)
         else:
             ok, msgs = check(baseline, fresh,
                              max_ratio_regression=args.max_ratio_regression,
@@ -436,6 +553,9 @@ def main(argv=None) -> int:
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
+    thresh = (args.max_obs_overhead - 1.0 if suites[0] == "obs"
+              else args.max_ratio_regression - 1.0)
+    msgs += variance_warnings(baseline, threshold=thresh)
     for m in msgs:
         print(m)
     print("benchmark regression gate:", "PASS" if ok else "FAIL")

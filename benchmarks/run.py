@@ -6,6 +6,7 @@ benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run --suite elastic  # resize cost
     PYTHONPATH=src python -m benchmarks.run --suite serve    # lookup service
     PYTHONPATH=src python -m benchmarks.run --suite hier     # flat vs 2-tier
+    PYTHONPATH=src python -m benchmarks.run --suite obs      # tracing cost
 """
 
 from __future__ import annotations
@@ -193,12 +194,13 @@ def bench_engine(*, quick: bool = False,
             run = lambda: jax.block_until_ready(  # noqa: E731
                 ex.run("delta", w0, data, eval_data, tau=tau).w_shared)
             run()  # compile
-            wall_s = float("inf")
+            samples = []
             for _ in range(3):  # best-of-3: single runs are too noisy to gate
                 t0 = time.perf_counter()
                 res = ex.run("delta", w0, data, eval_data, tau=tau)
                 jax.block_until_ready(res.w_shared)
-                wall_s = min(wall_s, time.perf_counter() - t0)
+                samples.append(time.perf_counter() - t0)
+            wall_s = min(samples)
             points = m * (n // tau) * tau
             us_per_point = wall_s / points * 1e6
             rows.append(f"engine_{name}_M{m},{wall_s * 1e6:.0f},"
@@ -208,6 +210,7 @@ def bench_engine(*, quick: bool = False,
                 "executor": name, "scheme": "delta", "m": m, "n": n,
                 "d": d, "kappa": kappa, "tau": tau,
                 "wall_s": wall_s, "us_per_point": us_per_point,
+                "wall_samples": samples,
                 "wall_ticks": np.asarray(res.wall_ticks).tolist(),
                 "distortion": np.asarray(res.distortion,
                                          np.float64).tolist(),
@@ -560,6 +563,124 @@ def bench_hier(*, quick: bool = False,
     return rows
 
 
+def bench_obs(*, quick: bool = False,
+              out_path: str = "BENCH_obs.json") -> list[str]:
+    """What does LIVE instrumentation cost?  Every scheme through the
+    8-worker mesh twice — bare vs a live ``Tracer`` + ``MetricsRegistry``
+    (enabled but unexported, the always-on configuration) — plus one
+    traced 2-host hierarchical run pushed through the trace-invariant
+    checker.
+
+      * ``overhead`` — per scheme: N interleaved off/on pairs on
+        identical seeded runs (A/B alternation so machine drift lands on
+        both sides).  Two noise-robust estimators are computed — the
+        best-of-N ratio min(on)/min(off) and the median of the per-pair
+        on/off ratios — and the recorded overhead is the SMALLER: host
+        noise is one-sided (it only ever adds time) and hits the two
+        estimators through different failure modes (a single quiet
+        sample repairs the min; drift cancellation repairs the median),
+        while a genuine instrumentation cost inflates both.  Raw
+        per-iteration samples are recorded so the gate can see the
+        noise floor.  Acceptance bar: <= 1.03x (instrumentation < 3%).
+      * ``trace`` — a 2-host hierarchical delta run with the tracer on:
+        the exported Chrome events must pass ``repro.obs.check_trace``
+        with tier-0 AND tier-1 merge spans and the per-window
+        ``codebook_divergence`` counter present (the ``launch.train
+        --hosts 2 --trace`` acceptance criterion, run in-process).
+
+    The overhead ratio is same-box (machine divides out); absolute CPU
+    walls are a harness, not TPU-indicative (``bench_vq_kernel`` caveat).
+    """
+    from repro import comm
+    from repro.data import synthetic
+    from repro.engine import InstantNetwork, MeshExecutor
+    from repro.obs import MetricsRegistry, Tracer, check_trace
+    from repro.topology import Topology
+
+    # n large enough that per-window compute amortizes the fixed
+    # per-window emission cost (span count scales with windows, not
+    # points); quick mode halves tau, which scales wall time without
+    # moving the emission/compute ratio
+    m, n, d, kappa, tau = 8, 4000, 8, 16, (50 if quick else 100)
+    m = min(m, len(jax.devices()))
+    repeats = 5 if quick else 9
+    key = jax.random.PRNGKey(0)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, : min(200, n)]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+
+    rows, records = [], []
+    for scheme in ("average", "delta", "async_delta"):
+        bare = MeshExecutor(network=InstantNetwork())
+        live = MeshExecutor(network=InstantNetwork(), tracer=Tracer(),
+                            metrics=MetricsRegistry())
+        for ex in (bare, live):  # the observe flag keys a distinct program
+            jax.block_until_ready(
+                ex.run(scheme, w0, data, eval_data, tau=tau,
+                       key=ka).w_shared)
+        samples: dict[str, list[float]] = {"off": [], "on": []}
+        for _ in range(repeats):
+            for label, ex in (("off", bare), ("on", live)):
+                t0 = time.perf_counter()
+                res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
+                jax.block_until_ready(res.w_shared)
+                samples[label].append(time.perf_counter() - t0)
+        min_ratio = min(samples["on"]) / min(samples["off"])
+        pair_ratios = sorted(on / off for on, off
+                             in zip(samples["on"], samples["off"]))
+        median_pair = pair_ratios[len(pair_ratios) // 2]
+        overhead = min(min_ratio, median_pair)
+        n_spans = len(live.tracer.spans())
+        rows.append(f"obs_overhead_{scheme},"
+                    f"{min(samples['on']) * 1e6:.0f},"
+                    f"on_over_off={overhead:.3f}x (bar <= 1.03x)"
+                    f" min_ratio={min_ratio:.3f} median_pair="
+                    f"{median_pair:.3f} spans={n_spans}")
+        records.append({
+            "kind": "overhead", "scheme": scheme, "m": m, "n": n, "d": d,
+            "kappa": kappa, "tau": tau, "repeats": repeats,
+            "wall_s_off": min(samples["off"]),
+            "wall_s_on": min(samples["on"]),
+            "wall_samples_off": samples["off"],
+            "wall_samples_on": samples["on"],
+            "overhead": overhead, "min_ratio": min_ratio,
+            "median_pair": median_pair, "spans": n_spans})
+
+    # -- traced 2-host hierarchical run -> invariant checker
+    hosts = min(2, m)
+    topo = Topology.from_spec(m, hosts=hosts)
+    tracer, registry = Tracer(), MetricsRegistry()
+    ex = MeshExecutor(topology=topo, network=InstantNetwork(),
+                      transport=comm.HierarchicalTransport(
+                          tier0="xla", tier1="xla",
+                          host_axis=topo.host_axis,
+                          worker_axis=topo.worker_axis),
+                      tracer=tracer, metrics=registry)
+    jax.block_until_ready(
+        ex.run("delta", w0, data, eval_data, tau=tau, key=ka).w_shared)
+    events = tracer.chrome_events()
+    errors = check_trace(
+        events, expect_merge_tiers={"0", "1"},
+        expect_counters=["codebook_divergence", "distortion"])
+    trace_ok = not errors
+    n_spans = sum(1 for e in events if e.get("ph") == "X")
+    rows.append(f"obs_trace_hier,0,ok={trace_ok} spans={n_spans} hosts="
+                f"{hosts}" + ("" if trace_ok
+                              else " errors=" + "; ".join(errors[:3])))
+    records.append({
+        "kind": "trace", "m": m, "hosts": hosts, "n": n, "d": d,
+        "kappa": kappa, "tau": tau, "trace_ok": trace_ok,
+        "n_spans": n_spans, "errors": errors})
+
+    with open(out_path, "w") as f:
+        json.dump({"suite": "obs", "devices": len(jax.devices()),
+                   "backend": jax.default_backend(),
+                   "results": records}, f, indent=1)
+    rows.append(f"obs_records,0,wrote {out_path} ({len(records)} records)")
+    return rows
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -574,6 +695,7 @@ BENCHES = {
     "serve": bench_serve,
     "comm": bench_comm,
     "hier": bench_hier,
+    "obs": bench_obs,
 }
 
 # named groups runnable as `--suite NAME`
@@ -583,6 +705,7 @@ SUITES = {
     "serve": ["serve"],
     "comm": ["comm"],
     "hier": ["hier"],
+    "obs": ["obs"],
     "paper": ["fig1", "fig2", "fig3", "fig4"],
     "lm": ["throughput", "decode"],
 }
@@ -592,7 +715,8 @@ _JSON_BENCHES = {"engine": "BENCH_engine.json",
                  "elastic": "BENCH_elastic.json",
                  "serve": "BENCH_serve.json",
                  "comm": "BENCH_comm.json",
-                 "hier": "BENCH_hier.json"}
+                 "hier": "BENCH_hier.json",
+                 "obs": "BENCH_obs.json"}
 
 
 def suite_out_path(out: str, name: str, *, multi: bool) -> str:

@@ -135,6 +135,29 @@ class CommLog:
         self.max_records = max_records
         self.records: list[CommRecord] = []
         self._dropped = 0      # records trimmed off the front, ever
+        self._metrics = None   # optional MetricsRegistry mirror
+
+    def attach_metrics(self, registry) -> None:
+        """Mirror every record landing in THIS log onto ``registry``
+        (``repro.obs.MetricsRegistry``): wire/logical bytes and call
+        counts become ``comm_*`` counters labeled by tag/tier/transport.
+
+        Attach only to the top-level transport's log — a
+        ``HierarchicalTransport`` copies its sub-transports' records into
+        its own log, so attaching to both levels would double-count."""
+        self._metrics = registry
+
+    def _record_metrics(self, rec: CommRecord) -> None:
+        if self._metrics is None:
+            return
+        labels = {"tag": rec.tag,
+                  "tier": "flat" if rec.tier is None else rec.tier,
+                  "transport": rec.transport}
+        self._metrics.counter("comm_wire_bytes", **labels).inc(
+            rec.wire_bytes * rec.calls)
+        self._metrics.counter("comm_logical_bytes", **labels).inc(
+            rec.logical_bytes * rec.calls)
+        self._metrics.counter("comm_calls", **labels).inc(rec.calls)
 
     def _trim(self) -> None:
         excess = len(self.records) - self.max_records
@@ -144,10 +167,13 @@ class CommLog:
 
     def append(self, rec: CommRecord) -> None:
         self.records.append(rec)
+        self._record_metrics(rec)
         self._trim()
 
     def extend(self, recs) -> None:
         self.records.extend(recs)
+        for rec in recs:
+            self._record_metrics(rec)
         self._trim()
 
     def mark(self) -> int:

@@ -83,6 +83,17 @@ class HierarchicalTransport(Transport):
                     f"only")
         self.tier0 = get_transport(tier0)
         self.tier1 = get_transport(tier1)
+        for label, sub in (("tier0", self.tier0), ("tier1", self.tier1)):
+            if isinstance(sub, HierarchicalTransport):
+                # a nested hier would re-tag records that already carry a
+                # tier — ``_delegate`` copies them into the outer log where
+                # the inner tier label is overwritten and the inner log's
+                # copies double-count the wire; two tiers is the platform
+                # model, deeper nesting needs its own accounting design
+                raise ValueError(
+                    f"{label}= must not be a HierarchicalTransport: nesting "
+                    f"would overwrite the inner tier tags and double-count "
+                    f"delegated CommRecords")
         self.host_axis = host_axis
         self.worker_axis = worker_axis
         # delegated calls record into the sub-transports' own logs (left in
@@ -134,10 +145,22 @@ class HierarchicalTransport(Transport):
 
     def _delegate(self, sub: Transport, tier: int, method: str, *args,
                   **kwargs):
-        """Call ``sub.method`` and re-log its records tagged ``tier=``."""
+        """Call ``sub.method`` and re-log its records tagged ``tier=``.
+
+        Each delegated record must be re-tagged EXACTLY once: a record
+        that already carries a tier has been through a hier delegation
+        before (aliased sub-transport, nested composition the constructor
+        missed), and overwriting its tag would misattribute — and its
+        earlier copy double-count — the wire bytes the CI gates pin."""
         mark = sub.log.mark()
         out = getattr(sub, method)(*args, **kwargs)
         for r in sub.log.since(mark):
+            if r.tier is not None:
+                raise RuntimeError(
+                    f"CommRecord {r.op!r} on {r.axis!r} already carries "
+                    f"tier={r.tier} — delegated records must be re-tagged "
+                    f"exactly once (is a sub-transport shared with another "
+                    f"hierarchical transport?)")
             self.log.append(dataclasses.replace(r, tier=tier))
         return out
 

@@ -53,16 +53,16 @@ def run_comm_cells(*, m: int = 8, n: int = 240, d: int = 8, kappa: int = 16,
         for scheme in SCHEMES:
             ex = MeshExecutor(network=InstantNetwork(),
                               transport=comm.get_transport(tname, **kwargs))
-            t0 = time.time()
+            t0 = time.perf_counter()
             res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
             jax.block_until_ready(res.w_shared)   # compile + first run
-            compile_s = time.time() - t0
-            best = float("inf")
+            compile_s = time.perf_counter() - t0
+            samples = []
             for _ in range(repeats):
                 t0 = time.perf_counter()
                 res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
                 jax.block_until_ready(res.w_shared)
-                best = min(best, time.perf_counter() - t0)
+                samples.append(time.perf_counter() - t0)
             merge = ex.last_comm["by_tag"].get(
                 "merge", {"wire_bytes": 0, "logical_bytes": 0, "calls": 0})
             cells.append({
@@ -70,7 +70,8 @@ def run_comm_cells(*, m: int = 8, n: int = 240, d: int = 8, kappa: int = 16,
                 "m": m, "n": n, "d": d, "kappa": kappa, "tau": tau,
                 "sparse_frac": sparse_frac if tname == "sparse" else None,
                 "compile_s": round(compile_s, 1),
-                "wall_s": best if repeats else compile_s,
+                "wall_s": min(samples) if samples else compile_s,
+                "wall_samples": samples,
                 "merge_wire_bytes": merge["wire_bytes"],
                 "merge_logical_bytes": merge["logical_bytes"],
                 "collective_calls": ex.last_comm["calls"],
@@ -154,16 +155,16 @@ def run_hier_cells(*, m: int = 8, hosts: int = 2, n: int = 240, d: int = 8,
     for variant in HIER_VARIANTS:
         for scheme in SCHEMES:
             ex = make_ex(variant)
-            t0 = time.time()
+            t0 = time.perf_counter()
             res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
             jax.block_until_ready(res.w_shared)   # compile + first run
-            compile_s = time.time() - t0
-            best = float("inf")
+            compile_s = time.perf_counter() - t0
+            samples = []
             for _ in range(repeats):
                 t0 = time.perf_counter()
                 res = ex.run(scheme, w0, data, eval_data, tau=tau, key=ka)
                 jax.block_until_ready(res.w_shared)
-                best = min(best, time.perf_counter() - t0)
+                samples.append(time.perf_counter() - t0)
             merge = ex.last_comm["by_tag"].get(
                 "merge", {"wire_bytes": 0, "logical_bytes": 0, "calls": 0})
             by_tier = merge.get("by_tier", {})
@@ -175,7 +176,8 @@ def run_hier_cells(*, m: int = 8, hosts: int = 2, n: int = 240, d: int = 8,
                 "tier1_frac": (tier1_frac if variant == "hier_sparse"
                                else None),
                 "compile_s": round(compile_s, 1),
-                "wall_s": best if repeats else compile_s,
+                "wall_s": min(samples) if samples else compile_s,
+                "wall_samples": samples,
                 "merge_wire_bytes": merge["wire_bytes"],
                 "tier0_wire_bytes": by_tier.get(0, {}).get("wire_bytes", 0),
                 "tier1_wire_bytes": by_tier.get(1, {}).get("wire_bytes", 0),

@@ -150,14 +150,14 @@ def run_async_vq(data: np.ndarray, w0: np.ndarray, *, tau: int = 10,
     # warm the distortion jit and record the t=0 baseline BEFORE any work
     d0 = float(kref.distortion_ref(eval_data, w0))
     trace = [(0.0, d0)]
-    t0 = time.time()
+    t0 = time.perf_counter()
     red.start()
     for th in threads:
         th.start()
-    while time.time() - t0 < duration_s:
+    while time.perf_counter() - t0 < duration_s:
         time.sleep(duration_s / 20)
         _, w_now = store.get()
-        trace.append((time.time() - t0,
+        trace.append((time.perf_counter() - t0,
                       float(kref.distortion_ref(eval_data, w_now))))
     stop.set()
     for th in threads:

@@ -49,6 +49,7 @@ from repro.distributed import elastic as elastic_lib
 from repro.engine import api
 from repro.engine.mesh import MeshExecutor, make_worker_mesh
 from repro.engine.network import InstantNetwork, NetworkModel
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from repro.topology import Topology
 
 ELASTIC_SCHEMES = ("average", "delta")
@@ -171,7 +172,8 @@ class ElasticMeshExecutor:
                  checkpointer=None, resume: bool = False,
                  late_policy: str = "merge", staleness_gamma: float = 0.5,
                  resize_cost_ticks: int = 0, on_window=None,
-                 publish_every: int = 1):
+                 publish_every: int = 1, tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         if not isinstance(schedule, ResizeSchedule):
             schedule = ResizeSchedule(schedule)
         if late_policy not in ("merge", "drop"):
@@ -206,6 +208,12 @@ class ElasticMeshExecutor:
         # CodebookStore sees one monotone stream over the whole elastic run
         self.on_window = on_window
         self.publish_every = publish_every
+        # one tracer/registry shared by every per-M segment executor, so the
+        # whole elastic run lands on one timeline (segments, resizes, comm)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        if metrics is not None:
+            self.transport.log.attach_metrics(metrics)
         # one MeshExecutor per worker count — each holds its plan_remesh-built
         # mesh and its own compiled-program cache
         self._mesh_ex: dict[int, MeshExecutor] = {}
@@ -234,14 +242,16 @@ class ElasticMeshExecutor:
                     worker_axis=self.topology.worker_axis)
                 self._mesh_ex[m] = MeshExecutor(
                     topology=topo, network=self.network,
-                    transport=self.transport, use_pallas=self.use_pallas)
+                    transport=self.transport, use_pallas=self.use_pallas,
+                    tracer=self.tracer, metrics=self.metrics)
             else:
                 plan = elastic_lib.plan_remesh(m, prev_data=prev_m,
                                                prev_model=1)
                 mesh = make_worker_mesh(plan.data * plan.model, self.axis)
                 self._mesh_ex[m] = MeshExecutor(
                     mesh=mesh, axis=self.axis, network=self.network,
-                    transport=self.transport, use_pallas=self.use_pallas)
+                    transport=self.transport, use_pallas=self.use_pallas,
+                    tracer=self.tracer, metrics=self.metrics)
         return self._mesh_ex[m]
 
     @staticmethod
@@ -281,6 +291,20 @@ class ElasticMeshExecutor:
             eval_data: jax.Array, *, tau: int, eps0: float = 0.5,
             decay: float = 1.0, key: jax.Array | None = None) -> SchemeResult:
         del key  # sync schemes are deterministic; kept for Executor protocol
+        t_wall = time.perf_counter()
+        with self.tracer.span("run", scheme=scheme, executor=self.name,
+                              m=data.shape[0] if data.ndim == 3 else None):
+            res = self._run(scheme, w0, data, eval_data, tau=tau, eps0=eps0,
+                            decay=decay)
+        if self.metrics is not None:
+            self.metrics.histogram("run_wall_s", executor=self.name,
+                                   scheme=scheme).observe(
+                time.perf_counter() - t_wall)
+        return res
+
+    def _run(self, scheme: str, w0: jax.Array, data: jax.Array,
+             eval_data: jax.Array, *, tau: int, eps0: float,
+             decay: float) -> SchemeResult:
         api.validate_scheme(scheme)
         if scheme not in ELASTIC_SCHEMES:
             raise ValueError(
@@ -338,9 +362,13 @@ class ElasticMeshExecutor:
             seg_w = min(max_w, want_w)
             if seg_w > 0:
                 seg_pts = cur_m * seg_w * tau
-                seg = pool[cursor: cursor + seg_pts]
-                seg_data = seg.reshape(seg_w * tau, cur_m, d).transpose(1, 0, 2)
-                seg_eval = self._eval_streams(eval_pool, cur_m)
+                with self.tracer.span("resplit", m=cur_m, windows=seg_w,
+                                      points=seg_pts):
+                    # reshard the global pool into cur_m time-major streams
+                    seg = pool[cursor: cursor + seg_pts]
+                    seg_data = seg.reshape(
+                        seg_w * tau, cur_m, d).transpose(1, 0, 2)
+                    seg_eval = self._eval_streams(eval_pool, cur_m)
                 mex = self._executor_for(cur_m, prev_m)
                 # assign unconditionally: the per-M executors are cached, so
                 # a previous run's publish adapter must not survive into a
@@ -407,62 +435,84 @@ class ElasticMeshExecutor:
         t_start = time.perf_counter()
         ckpt_step = None
         new_m, plan = self._clamp_m(ev.new_m)
-        # un-commit the shared prototypes from the old mesh: the segment
-        # output is sharded over the outgoing device set, and the next
-        # shard_map runs on a different one
-        w_srd = jnp.asarray(jax.device_get(w_srd))
-        late_pts = 0
-        late_skipped = False
-        if new_m < cur_m and self.late_policy == "merge":
-            # the departed workers were mid-flight on their next window when
-            # the resize fired: their deltas arrive late, computed against the
-            # stale shared version, and are summed in via eq. (8) damped by
-            # one window of staleness
-            n_dep = cur_m - new_m
-            need = n_dep * tau
-            if pool.shape[0] - cursor >= need:
-                d = pool.shape[-1]
-                late = pool[cursor: cursor + need].reshape(n_dep, tau, d)
-                cursor += need
-                late_pts = need
-                deltas, _ = jax.vmap(
-                    lambda z: vq.window_displacement(
-                        w_srd, z, jnp.asarray(t0, jnp.int32), eps0=eps0,
-                        decay=decay))(late)
-                w_srd = elastic_lib.merge_late_delta(
-                    w_srd, jnp.sum(deltas, axis=0), delay_windows=1,
-                    gamma=self.staleness_gamma)
-                # the departing workers' deltas ride the same accounting
-                # stream as the collectives: each uploads one (kappa, d)
-                # f32 displacement to the survivors, host-side.  On a
-                # hierarchical topology the departed workers were whole
-                # host groups, so the upload crossed the inter-host tier.
-                self.transport.record_host_transfer(
-                    logical_bytes=4 * int(w_srd.size),
-                    wire_bytes=4 * int(w_srd.size),
-                    participants=n_dep, axis=self.axis, tag="late_delta",
-                    tier=1 if self._hierarchical else None)
-            else:
-                late_skipped = True  # pool too dry; recorded, not silent
-        # rebuild the mesh for the survivors (cached per M)
-        self._executor_for(new_m, cur_m)
-        jax.block_until_ready(w_srd)
-        if self.checkpointer is not None:
-            # post-event state: a resume from here continues bit-identically
-            # (late deltas already integrated, cursor already advanced)
-            state = {"w_srd": w_srd,
-                     "t": np.asarray(t0, np.int64),
-                     "cursor": np.asarray(cursor, np.int64),
-                     "window": np.asarray(window_idx, np.int64),
-                     "m": np.asarray(new_m, np.int64),
-                     "tick_offset": np.asarray(
-                         tick_offset + self.resize_cost_ticks, np.int64)}
-            self.checkpointer.save(window_idx, state)
-            ckpt_step = window_idx
+        with self.tracer.span("resize", window=window_idx, old_m=cur_m,
+                              new_m=new_m):
+            # un-commit the shared prototypes from the old mesh: the segment
+            # output is sharded over the outgoing device set, and the next
+            # shard_map runs on a different one
+            w_srd = jnp.asarray(jax.device_get(w_srd))
+            late_pts = 0
+            late_skipped = False
+            if new_m < cur_m and self.late_policy == "merge":
+                # the departed workers were mid-flight on their next window
+                # when the resize fired: their deltas arrive late, computed
+                # against the stale shared version, and are summed in via
+                # eq. (8) damped by one window of staleness
+                n_dep = cur_m - new_m
+                need = n_dep * tau
+                if pool.shape[0] - cursor >= need:
+                    with self.tracer.span("late_delta", n_dep=n_dep,
+                                          points=need):
+                        d = pool.shape[-1]
+                        late = pool[cursor: cursor + need].reshape(
+                            n_dep, tau, d)
+                        cursor += need
+                        late_pts = need
+                        deltas, _ = jax.vmap(
+                            lambda z: vq.window_displacement(
+                                w_srd, z, jnp.asarray(t0, jnp.int32),
+                                eps0=eps0, decay=decay))(late)
+                        w_srd = elastic_lib.merge_late_delta(
+                            w_srd, jnp.sum(deltas, axis=0), delay_windows=1,
+                            gamma=self.staleness_gamma)
+                        # the departing workers' deltas ride the same
+                        # accounting stream as the collectives: each uploads
+                        # one (kappa, d) f32 displacement to the survivors,
+                        # host-side.  On a hierarchical topology the departed
+                        # workers were whole host groups, so the upload
+                        # crossed the inter-host tier.
+                        self.transport.record_host_transfer(
+                            logical_bytes=4 * int(w_srd.size),
+                            wire_bytes=4 * int(w_srd.size),
+                            participants=n_dep, axis=self.axis,
+                            tag="late_delta",
+                            tier=1 if self._hierarchical else None)
+                    if self.metrics is not None:
+                        # every departing worker's delta lands exactly one
+                        # window stale (delay_windows=1 above)
+                        self.metrics.counter("staleness_windows").inc(n_dep)
+                        self.metrics.counter("late_delta_points").inc(need)
+                else:
+                    late_skipped = True  # pool too dry; recorded, not silent
+                    if self.metrics is not None:
+                        self.metrics.counter("late_delta_skipped").inc()
+            # rebuild the mesh for the survivors (cached per M)
+            with self.tracer.span("remesh", m=new_m):
+                self._executor_for(new_m, cur_m)
+                jax.block_until_ready(w_srd)
+            if self.checkpointer is not None:
+                # post-event state: a resume from here continues
+                # bit-identically (late deltas already integrated, cursor
+                # already advanced)
+                with self.tracer.span("checkpoint", step=window_idx):
+                    state = {"w_srd": w_srd,
+                             "t": np.asarray(t0, np.int64),
+                             "cursor": np.asarray(cursor, np.int64),
+                             "window": np.asarray(window_idx, np.int64),
+                             "m": np.asarray(new_m, np.int64),
+                             "tick_offset": np.asarray(
+                                 tick_offset + self.resize_cost_ticks,
+                                 np.int64)}
+                    self.checkpointer.save(window_idx, state)
+                    ckpt_step = window_idx
+        wall_s = time.perf_counter() - t_start
+        if self.metrics is not None:
+            self.metrics.counter("resize_events").inc()
+            self.metrics.histogram("resize_wall_s").observe(wall_s)
         self.resize_events.append(ResizeStats(
             window=window_idx, old_m=cur_m, new_m=new_m,
             tp_preserved=plan.tp_preserved, late_points=late_pts,
             checkpoint_step=ckpt_step,
-            wall_s=time.perf_counter() - t_start,
+            wall_s=wall_s,
             late_skipped=late_skipped))
         return w_srd, new_m, cursor

@@ -38,6 +38,7 @@ bit-for-bit the one a real 8-chip mesh runs.
 
 from __future__ import annotations
 
+import time
 from typing import Any, Callable
 
 import jax
@@ -51,6 +52,7 @@ from repro.core.schemes import SchemeResult
 from repro.engine import api, merge as merge_lib
 from repro.engine.network import GeometricDelayNetwork, NetworkModel
 from repro.kernels import ops
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from repro.topology import Topology
 from repro.topology import make_worker_mesh  # noqa: F401 — re-export; the
 # construction itself lives in repro.topology (the only module allowed to
@@ -115,7 +117,9 @@ class MeshExecutor:
                  use_pallas: bool = True, eval_every: int = 10,
                  vmem_budget_bytes: int | None = None,
                  on_window: Callable[[int, jax.Array], None] | None = None,
-                 publish_every: int = 1):
+                 publish_every: int = 1,
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         if not axis:
             raise ValueError("worker axis name must be a non-empty string")
         if topology is not None:
@@ -151,6 +155,14 @@ class MeshExecutor:
         # The async scheme has no window barrier: it publishes once, at end.
         self.on_window = on_window
         self.publish_every = publish_every
+        # observability: a disabled tracer is a constant-time no-op, so the
+        # hot path stays on the <3% overhead budget the obs bench enforces;
+        # when a registry is attached every CommRecord is mirrored onto it
+        # (per-tag/per-tier wire bytes become first-class metrics)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        if metrics is not None:
+            self.transport.log.attach_metrics(metrics)
         # compiled-program cache: rebuilding the shard_map closure on every
         # run() would recompile each time; key = everything trace-affecting.
         # Each entry also keeps the CommRecords traced for that program, so
@@ -186,7 +198,8 @@ class MeshExecutor:
         if cache_key not in self._compiled:
             fn = build()
             mark = log.mark()
-            out = fn(*args)                  # first call traces -> records
+            with self.tracer.span("compile", program=str(cache_key[0])):
+                out = fn(*args)              # first call traces -> records
             self._compiled[cache_key] = (fn, log.since(mark))
             return out
         fn, records = self._compiled[cache_key]
@@ -222,22 +235,30 @@ class MeshExecutor:
             m, self.axis)
         _validate_mesh(mesh, self._axes, m)
         mark = self.transport.log.mark()
+        t_wall = time.perf_counter()
         try:
-            if scheme == "async_delta":
-                res = self._run_async(mesh, w0, data, eval_data, tau=tau,
-                                      eps0=eps0, decay=decay, key=key)
-                if self.on_window is not None:
-                    self.on_window(data.shape[1] // tau, res.w_shared)
-            elif self.on_window is not None:
-                res = self._run_sync_published(mesh, scheme, w0, data,
-                                               eval_data, tau=tau, eps0=eps0,
-                                               decay=decay, t0=0)
-            else:
-                res, _ = self._run_sync(mesh, scheme, w0, data, eval_data,
-                                        tau=tau, eps0=eps0, decay=decay)
+            with self.tracer.span("run", scheme=scheme, executor=self.name,
+                                  m=m, transport=self.transport.name):
+                if scheme == "async_delta":
+                    res = self._run_async(mesh, w0, data, eval_data, tau=tau,
+                                          eps0=eps0, decay=decay, key=key)
+                    if self.on_window is not None:
+                        self.on_window(data.shape[1] // tau, res.w_shared)
+                elif self.on_window is not None:
+                    res = self._run_sync_published(mesh, scheme, w0, data,
+                                                   eval_data, tau=tau,
+                                                   eps0=eps0, decay=decay,
+                                                   t0=0)
+                else:
+                    res, _ = self._run_sync(mesh, scheme, w0, data, eval_data,
+                                            tau=tau, eps0=eps0, decay=decay)
         finally:
             self.last_comm = comm.CommLog.summarize(
                 self.transport.log.since(mark))
+        if self.metrics is not None:
+            self.metrics.histogram("run_wall_s", executor=self.name,
+                                   scheme=scheme).observe(
+                time.perf_counter() - t_wall)
         return res
 
     def run_segment(self, scheme: str, w0: jax.Array, data: jax.Array,
@@ -266,14 +287,16 @@ class MeshExecutor:
         _validate_mesh(mesh, self._axes, m)
         mark = self.transport.log.mark()
         try:
-            if self.on_window is not None:
-                res = self._run_sync_published(mesh, scheme, w0, data,
-                                               eval_data, tau=tau, eps0=eps0,
-                                               decay=decay, t0=t0)
-            else:
-                res, _ = self._run_sync(mesh, scheme, w0, data, eval_data,
-                                        tau=tau, eps0=eps0, decay=decay,
-                                        t0=t0)
+            with self.tracer.span("segment", scheme=scheme, m=m, t0=t0):
+                if self.on_window is not None:
+                    res = self._run_sync_published(mesh, scheme, w0, data,
+                                                   eval_data, tau=tau,
+                                                   eps0=eps0, decay=decay,
+                                                   t0=t0)
+                else:
+                    res, _ = self._run_sync(mesh, scheme, w0, data, eval_data,
+                                            tau=tau, eps0=eps0, decay=decay,
+                                            t0=t0)
         finally:
             self.last_comm = comm.CommLog.summarize(
                 self.transport.log.since(mark))
@@ -296,9 +319,10 @@ class MeshExecutor:
         while done < n_windows:
             k = min(self.publish_every, n_windows - done)
             seg = data[:, done * tau:(done + k) * tau]
-            res, ms = self._run_sync(mesh, scheme, w, seg, eval_data,
-                                     tau=tau, eps0=eps0, decay=decay, t0=t,
-                                     merge_state=ms)
+            with self.tracer.span("chunk", windows=k, t0=t):
+                res, ms = self._run_sync(mesh, scheme, w, seg, eval_data,
+                                         tau=tau, eps0=eps0, decay=decay,
+                                         t0=t, merge_state=ms)
             if wt is None:
                 # per-window tick cost as the segment run charged it
                 # (window_ticks + any bandwidth transfer charge)
@@ -345,6 +369,14 @@ class MeshExecutor:
                 lambda x: jnp.broadcast_to(x, (m,) + x.shape),
                 strategy.init_state(w0))
 
+        # observing runs additionally reduce the inter-worker codebook
+        # divergence each window (mean over workers of ||w_local - w_merged||^2
+        # — the future DynamicMerge trigger signal); the reduce rides an
+        # "eval"-tagged collective so the exactly-pinned merge wire bytes are
+        # untouched, and the flag joins the cache key because it changes the
+        # compiled program's outputs
+        observe = self.tracer.enabled or self.metrics is not None
+
         def body(w0_in, t0_in, ms_in, data_l, eval_l):
             stream = data_l[0]                       # (n, d) local shard
             windows = stream[: n_windows * tau].reshape(n_windows, tau, -1)
@@ -359,38 +391,128 @@ class MeshExecutor:
                 w_srd, ms = strategy(w_srd, w_fin, axis, ms,
                                      calls=n_windows)
                 t = t + tau
+                if observe:
+                    # one stacked reduce for (distortion, divergence): the
+                    # observing program keeps the bare program's collective
+                    # count, so live instrumentation stays on the <3% obs
+                    # bench budget
+                    cd, _ = transport.all_reduce(
+                        jnp.stack([vq.distortion(ev, w_srd),
+                                   jnp.sum((w_fin - w_srd) ** 2)]),
+                        axis, op="mean", calls=n_windows, tag="eval")
+                    return (w_srd, t, ms), (cd[0], cd[1])
                 c, _ = transport.all_reduce(
                     vq.distortion(ev, w_srd), axis, op="mean",
                     calls=n_windows, tag="eval")
                 return (w_srd, t, ms), c
 
-            (w_srd, _, ms_out), curve = jax.lax.scan(
+            (w_srd, _, ms_out), ys = jax.lax.scan(
                 window, (w0_in, t0_in, ms0), windows)
-            return w_srd, curve, jax.tree.map(lambda x: x[None], ms_out)
+            ms_out = jax.tree.map(lambda x: x[None], ms_out)
+            if observe:
+                return w_srd, ys[0], ys[1], ms_out
+            return w_srd, ys, ms_out
 
         cache_key = ("sync", scheme, mesh, w0.shape, data.shape,
                      eval_data.shape, tau, eps0, decay, use_pallas,
-                     vmem_budget)
+                     vmem_budget, observe)
 
         def build():
+            out_specs = ((P(), P(), P(), P(axis)) if observe
+                         else (P(), P(), P(axis)))
             return jax.jit(compat.shard_map(
                 body, mesh,
                 in_specs=(P(), P(), P(axis), P(axis), P(axis)),
-                out_specs=(P(), P(), P(axis)),
+                out_specs=out_specs,
                 axis_names=frozenset(axes), check_vma=False))
 
-        w_final, curve, ms_out = self._call_compiled(
+        out = self._call_compiled(
             cache_key, build, w0, jnp.asarray(t0, jnp.int32), merge_state,
             data, eval_data)
+        if observe:
+            w_final, curve, divergence, ms_out = out
+        else:
+            (w_final, curve, ms_out), divergence = out, None
         # each tier's measured per-window merge bytes is charged at that
         # link class's bandwidth (slow-DCN tier 1 vs ICI tier 0)
+        tier_wire = self._merge_wire_by_tier(cache_key)
         wt = self.network.window_ticks(tau)
-        for tier, total in self._merge_wire_by_tier(cache_key).items():
+        for tier, total in tier_wire.items():
             wt += self.network.transfer_ticks(total / max(n_windows, 1),
                                               tier=tier)
         ticks = jnp.arange(1, n_windows + 1, dtype=jnp.int32) * wt
+        if observe:
+            self._emit_sync_obs(scheme=scheme, m=m, n_windows=n_windows,
+                                tau=tau, wt=wt, tier_wire=tier_wire,
+                                w_start=t0 // tau, curve=curve,
+                                divergence=divergence)
         return SchemeResult(w_shared=w_final, wall_ticks=ticks,
                             distortion=curve), ms_out
+
+    def _emit_sync_obs(self, *, scheme: str, m: int, n_windows: int,
+                       tau: int, wt: int, tier_wire: dict, w_start: int,
+                       curve, divergence) -> None:
+        """Mirror one sync segment onto the tick timeline and the registry.
+
+        The window scan is a fused device program, so the per-worker
+        timeline is *modeled* from the same ``NetworkModel`` arithmetic
+        that produced ``wall_ticks`` (1 tick = 1 us in the trace): each
+        worker computes for ``tau`` ticks, then the merge occupies the
+        rest of the window, split across tiers in proportion to their
+        measured wire bytes.  Distortion and divergence are the real
+        per-window reduced values."""
+        tr, mt = self.tracer, self.metrics
+        curve_np = np.asarray(curve)
+        div_np = None if divergence is None else np.asarray(divergence)
+        if mt is not None:
+            mt.counter("windows_total", scheme=scheme).inc(n_windows)
+            h = mt.histogram("distortion", scheme=scheme)
+            for c in curve_np:
+                h.observe(float(c))
+            if div_np is not None:
+                g = mt.gauge("codebook_divergence", scheme=scheme)
+                for dv in div_np:
+                    g.set(float(dv))
+            for tier, total in tier_wire.items():
+                mt.counter(
+                    "merge_wire_bytes",
+                    tier="flat" if tier is None else tier,
+                    scheme=scheme).inc(total)
+        if not tr.enabled:
+            return
+        merge_total = max(wt - tau, 0)
+        wire_sum = sum(tier_wire.values()) or 1
+        # hoist the window-invariant geometry: track names and the tier
+        # split are the same every window, only timestamps advance
+        tracks = [f"worker {w}" for w in range(m)]
+        tier_rows = []                   # (track, tier_attr, wire, dur)
+        for tier, total in sorted(tier_wire.items(),
+                                  key=lambda kv: (kv[0] is None,
+                                                  kv[0] or 0)):
+            tier_rows.append((
+                "merge flat" if tier is None else f"merge tier {tier}",
+                "flat" if tier is None else tier,
+                int(round(total / max(n_windows, 1))),
+                merge_total * (total / wire_sum)))
+        add = tr.add_span
+        for wi in range(n_windows):
+            win = w_start + wi
+            t_start = float(win * wt)
+            for worker, track in enumerate(tracks):
+                add("window", t_start, wt, track=track, window=win,
+                    worker=worker, scheme=scheme)
+                add("compute", t_start, tau, track=track, window=win,
+                    worker=worker)
+            t_m = t_start + tau
+            for track, tier_attr, wire, dur in tier_rows:
+                add("merge", t_m, dur, track=track, tier=tier_attr,
+                    wire_bytes=wire, window=win, scheme=scheme)
+                t_m += dur
+            t_end = t_start + wt
+            tr.counter("distortion", float(curve_np[wi]), ts_us=t_end)
+            if div_np is not None:
+                tr.counter("codebook_divergence", float(div_np[wi]),
+                           ts_us=t_end)
 
     # -- asynchronous scheme (eq. 9) ----------------------------------------
 
@@ -474,7 +596,66 @@ class MeshExecutor:
 
         w_final, curve = self._call_compiled(cache_key, build, w0, data,
                                              eval_data, done_at)
+        if self.tracer.enabled or self.metrics is not None:
+            self._emit_async_obs(m=m, n=n, tau=tau, done_at=done_at,
+                                 eval_ticks=eval_ticks, curve=curve,
+                                 cache_key=cache_key)
         return SchemeResult(
             w_shared=w_final,
             wall_ticks=jnp.asarray(eval_ticks + 1, jnp.int32),
             distortion=curve)
+
+    def _emit_async_obs(self, *, m: int, n: int, tau: int, done_at,
+                        eval_ticks, curve, cache_key: tuple) -> None:
+        """Per-worker round timeline for eq. 9 (1 tick = 1 us in the trace).
+
+        Each worker's round r computes for ``tau`` ticks and then keeps
+        computing while its upload is in flight; the round *lands* at
+        ``done_at[worker, r]``, where the in-flight delta joins the masked
+        reduce.  Rendering compute and the in-flight ``merge`` span on the
+        same worker track is what makes the paper's compute/communication
+        overlap visible: worker A's merge span runs concurrently with
+        worker B's compute span on the adjacent track.  Wire bytes are the
+        per-tick masked-reduce charge attributed to the round's span."""
+        tr, mt = self.tracer, self.metrics
+        scheme = "async_delta"
+        done_np = np.asarray(done_at)
+        curve_np = np.asarray(curve)
+        tier_wire = self._merge_wire_by_tier(cache_key)
+        if mt is not None:
+            h = mt.histogram("distortion", scheme=scheme)
+            for c in curve_np:
+                h.observe(float(c))
+            rounds = int((done_np <= n).sum())
+            mt.counter("async_rounds_total", scheme=scheme).inc(rounds)
+            for tier, total in tier_wire.items():
+                mt.counter(
+                    "merge_wire_bytes",
+                    tier="flat" if tier is None else tier,
+                    scheme=scheme).inc(total)
+        if not tr.enabled:
+            return
+        for worker in range(m):
+            prev = 0
+            for r in range(done_np.shape[1]):
+                if prev >= n:
+                    break
+                end = min(int(done_np[worker, r]), n)
+                if end <= prev:
+                    continue
+                track = f"worker {worker}"
+                tr.add_span("round", prev, end - prev, track=track,
+                            worker=worker, round=r, scheme=scheme)
+                tr.add_span("compute", prev, min(tau, end - prev),
+                            track=track, worker=worker, round=r)
+                m_start = prev + min(tau, end - prev)
+                for tier, total in tier_wire.items():
+                    tr.add_span(
+                        "merge", m_start, end - m_start,
+                        track=track,
+                        tier="flat" if tier is None else tier,
+                        wire_bytes=int(round(total / n * (end - prev))),
+                        worker=worker, round=r)
+                prev = end
+        for k, t in enumerate(eval_ticks):
+            tr.counter("distortion", float(curve_np[k]), ts_us=float(t + 1))

@@ -211,7 +211,7 @@ def build_vq_cell(shape_name: str, *, multi_pod: bool, tau: int = 10):
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
              merge: str = "none", tau: int = 10, verbose: bool = True,
              quantized: bool = False) -> dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     rec: dict = {"arch": arch_id, "shape": shape_name,
                  "mesh": "2x16x16" if multi_pod else "16x16",
                  "merge": merge}
@@ -258,7 +258,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
                 key=lambda k: terms[f"t_{k}"])
             rec.update({
                 "status": "ok",
-                "compile_s": round(time.time() - t0, 1),
+                "compile_s": round(time.perf_counter() - t0, 1),
                 "collectives": coll, "roofline": terms,
                 "memory": {"peak_bytes": getattr(
                     mem, "peak_memory_in_bytes", 0)},
@@ -285,7 +285,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
             coll["tpu_adjusted_bytes"] / per_step_div / roofline.ICI_BW)
         rec.update({
             "status": "ok",
-            "compile_s": round(time.time() - t0, 1),
+            "compile_s": round(time.perf_counter() - t0, 1),
             "cost_flops_bodyonce": float(cost.get("flops", 0.0)),
             "cost_bytes_bodyonce": float(cost.get("bytes accessed", 0.0)),
             "collectives": coll,

@@ -32,9 +32,12 @@ def run_vq(args) -> int:
     from repro.data import synthetic
     from repro.engine import (ElasticMeshExecutor, InstantNetwork,
                               ResizeSchedule, get_network)
+    from repro.obs import MetricsRegistry, Tracer
     from repro.serve import (CodebookStore, QuantizeService, ShardedLookup,
                              run_load)
 
+    tracer = Tracer() if (args.trace or args.metrics) else None
+    metrics = MetricsRegistry() if (args.trace or args.metrics) else None
     if args.smoke:
         args.requests = min(args.requests, 100)
         args.points = min(args.points, 200)
@@ -75,7 +78,8 @@ def run_vq(args) -> int:
              (max(2, 2 * n_windows // 3), m_train)])
         ex = ElasticMeshExecutor(schedule, network=InstantNetwork(),
                                  on_window=store.publisher(),
-                                 publish_every=args.publish_every)
+                                 publish_every=args.publish_every,
+                                 tracer=tracer, metrics=metrics)
         eval_data = data[:, : min(100, args.points)]
 
         def train():
@@ -86,9 +90,10 @@ def run_vq(args) -> int:
 
         trainer = threading.Thread(target=train, name="train-publish")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with QuantizeService(store, lookup,
-                         max_delay_s=args.max_delay_ms * 1e-3) as service:
+                         max_delay_s=args.max_delay_ms * 1e-3,
+                         tracer=tracer, metrics=metrics) as service:
         if trainer is not None:
             trainer.start()
             # don't let the load race the trainer's compile: wait for the
@@ -100,10 +105,11 @@ def run_vq(args) -> int:
                 return 1
         report = run_load(service, n_requests=args.requests, d=args.dim,
                           rows_per_request=args.rows, network=network,
-                          tick_s=args.tick_ms * 1e-3, key=ka)
+                          tick_s=args.tick_ms * 1e-3, key=ka,
+                          tracer=tracer, metrics=metrics)
         if trainer is not None:
             trainer.join()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
 
     print(report.summary())
     st = service.stats
@@ -115,6 +121,16 @@ def run_vq(args) -> int:
               f"(served {report.versions_min}..{report.versions_max}, "
               f"max staleness {report.staleness_max})")
     print(f"done in {wall:.2f}s wall")
+    if metrics is not None:
+        print("metrics:")
+        print(metrics.summary_table())
+    if args.trace:
+        tracer.export_chrome(args.trace)
+        print(f"trace: {len(tracer.spans())} spans -> {args.trace} "
+              f"(load at https://ui.perfetto.dev)")
+    if args.metrics:
+        n_rows = metrics.dump_jsonl(args.metrics, run="serve-vq")
+        print(f"metrics: {n_rows} rows appended -> {args.metrics}")
     if trainer_err:
         print(f"error: training thread failed: {trainer_err[0]}")
         return 1
@@ -145,7 +161,7 @@ def run_lm(args) -> int:
     prefill = jax.jit(steps_lib.make_prefill_step(cfg, max_len=max_len))
     serve = jax.jit(steps_lib.make_serve_step(cfg))
 
-    total_tok, t0 = 0, time.time()
+    total_tok, t0 = 0, time.perf_counter()
     with mesh:
         for wave in range(args.waves):
             prompts = jax.random.randint(
@@ -168,7 +184,7 @@ def run_lm(args) -> int:
                 total_tok += args.batch
             print(f"wave {wave}: generated {args.gen} tokens x "
                   f"{args.batch} requests")
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"served {args.waves * args.batch} requests, "
           f"{total_tok} tokens in {dt:.1f}s ({total_tok / dt:,.0f} tok/s)")
     return 0
@@ -210,6 +226,12 @@ def main(argv=None) -> int:
     ap.add_argument("--points", type=int, default=400,
                     help="training points per worker (--train-publish)")
     ap.add_argument("--tau", type=int, default=10)
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="write a Chrome trace-event file (Perfetto): "
+                         "flush spans, load spans, trainer windows")
+    ap.add_argument("--metrics", default="", metavar="OUT.jsonl",
+                    help="append the metrics registry (latency/fill/queue "
+                         "histograms) as JSONL")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

@@ -59,7 +59,15 @@ def run_vq(args) -> int:
     from repro.comm.sweep import acceptance_sparse_frac
     from repro.data import synthetic
     from repro.engine import get_executor, get_network
+    from repro.obs import MetricsRegistry, Tracer
     from repro.topology import Topology
+
+    # --trace records spans + counters for Perfetto; --metrics dumps the
+    # registry as JSONL.  Either flag turns full instrumentation on (the
+    # summary table needs the registry, the registry feeds on the tracer's
+    # code paths), so one run can produce both artifacts.
+    tracer = Tracer() if (args.trace or args.metrics) else None
+    metrics = MetricsRegistry() if (args.trace or args.metrics) else None
 
     key = jax.random.PRNGKey(args.seed)
     kd, kw, ka = jax.random.split(key, 3)
@@ -94,14 +102,18 @@ def run_vq(args) -> int:
         tier1_frac = (args.tier1_frac if args.tier1_frac is not None
                       else acceptance_sparse_frac(args.kappa, args.dim))
         try:
+            # build the tier-1 transport FIRST: a bad --tier1-frac should
+            # report as a frac error even on a box with too few devices
+            # for the worker mesh
+            tier1 = (comm.get_transport("sparse", frac=tier1_frac)
+                     if args.tier1_transport == "sparse"
+                     else args.tier1_transport)
             topology = Topology.from_spec(args.workers, hosts=args.hosts)
             transport = comm.HierarchicalTransport(
-                tier0=transport, tier1=args.tier1_transport,
-                tier1_frac=tier1_frac if args.tier1_transport == "sparse"
-                else None,
+                tier0=transport, tier1=tier1,
                 host_axis=topology.host_axis,
                 worker_axis=topology.worker_axis)
-        except ValueError as e:  # bad hosts split / tier-1 frac
+        except ValueError as e:  # bad tier-1 frac / hosts split
             print(f"error: {e}")
             return 2
     if args.resume and not args.resize:
@@ -144,6 +156,8 @@ def run_vq(args) -> int:
         if args.executor == "mesh":
             ex_kw["transport"] = transport
             ex_kw["topology"] = topology
+    ex_kw["tracer"] = tracer
+    ex_kw["metrics"] = metrics
     try:
         executor = get_executor(ex_name, **ex_kw)
     except ValueError as e:  # bad resize spec
@@ -157,7 +171,7 @@ def run_vq(args) -> int:
              f" tier1={args.tier1_transport}" if topology is not None
              else "")
           + (f" resize={args.resize}" if args.resize else ""))
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         res = executor.run(args.scheme, w0, data, eval_data, tau=args.tau,
                            eps0=args.eps0, key=ka)
@@ -165,7 +179,7 @@ def run_vq(args) -> int:
         print(f"error: {e}")
         return 2
     jax.block_until_ready(res.w_shared)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     curve = np.asarray(res.distortion)
     ticks = np.asarray(res.wall_ticks)
     idx = np.unique(np.linspace(0, len(curve) - 1, 10).astype(int))
@@ -193,6 +207,17 @@ def run_vq(args) -> int:
             label = "intra-host" if tier == 0 else "inter-host"
             print(f"  tier {tier} ({label}): wire {t['wire_bytes']:,} B "
                   f"/ logical {t['logical_bytes']:,} B per worker")
+    if metrics is not None:
+        print("metrics:")
+        print(metrics.summary_table())
+    if args.trace:
+        tracer.export_chrome(args.trace)
+        print(f"trace: {len(tracer.spans())} spans -> {args.trace} "
+              f"(load at https://ui.perfetto.dev)")
+    if args.metrics:
+        n_rows = metrics.dump_jsonl(
+            args.metrics, run=f"train-vq-{args.scheme}-{executor.name}")
+        print(f"metrics: {n_rows} rows appended -> {args.metrics}")
     if ckpt is not None:
         ckpt.wait()
     return 0
@@ -265,6 +290,13 @@ def main(argv=None) -> int:
                     help="thread backend: wall seconds to run")
     ap.add_argument("--comm-delay-s", type=float, default=0.0,
                     help="thread backend: per-round comm latency (seconds)")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="write a Chrome trace-event file (Perfetto): "
+                         "per-worker window/compute spans, per-tier merge "
+                         "spans, distortion + codebook-divergence counters")
+    ap.add_argument("--metrics", default="", metavar="OUT.jsonl",
+                    help="append the metrics registry (counters/gauges/"
+                         "histograms) as JSONL, one object per metric")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -304,7 +336,7 @@ def main(argv=None) -> int:
             start = latest
             print(f"resumed from step {start}")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         for i in range(start, args.steps):
             batch = lm_batch(dcfg, i)  # step-indexed: restart-deterministic
@@ -312,7 +344,7 @@ def main(argv=None) -> int:
             if (i + 1) % args.log_every == 0:
                 loss = float(metrics["loss"])
                 tps = ((i + 1 - start) * args.batch * args.seq_len
-                       / (time.time() - t0))
+                       / (time.perf_counter() - t0))
                 print(f"step {i + 1:5d}  loss {loss:.4f}  "
                       f"gnorm {float(metrics['grad_norm']):.2f}  "
                       f"tok/s {tps:,.0f}")
@@ -320,7 +352,7 @@ def main(argv=None) -> int:
                 ckpt.save_async(i + 1, state)
     if ckpt:
         ckpt.wait()
-    print(f"done: {args.steps - start} steps in {time.time() - t0:.1f}s")
+    print(f"done: {args.steps - start} steps in {time.perf_counter() - t0:.1f}s")
     return 0
 
 

@@ -1,0 +1,27 @@
+"""Unified observability: span tracing + metrics registry + exporters.
+
+``Tracer`` records wall spans (monotonic clock) and modeled tick-timeline
+spans, exporting Chrome trace-event JSON for Perfetto.  ``MetricsRegistry``
+holds counters/gauges/streaming histograms and dumps an append-only JSONL
+sink.  ``check_trace`` validates the structural invariants CI gates on.
+"""
+
+from repro.obs.check import check_trace, load_trace
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               format_metric, load_jsonl)
+from repro.obs.trace import NULL_TRACER, CounterEvent, SpanEvent, Tracer
+
+__all__ = [
+    "NULL_TRACER",
+    "Counter",
+    "CounterEvent",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "SpanEvent",
+    "Tracer",
+    "check_trace",
+    "format_metric",
+    "load_jsonl",
+    "load_trace",
+]

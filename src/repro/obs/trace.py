@@ -1,0 +1,208 @@
+"""Host-side span tracer with Chrome trace-event (Perfetto) export.
+
+Two kinds of spans share one timeline:
+
+* **wall spans** — real host work (``with tracer.span("run", ...):``),
+  stamped with ``time.monotonic_ns`` (never ``time.time`` — span math must
+  not jump with wall-clock adjustments).  Nesting is the natural ``with``
+  nesting; a span records its attrs, track, and thread automatically.
+* **modeled spans** — the engine's tick-timeline reconstruction
+  (``tracer.add_span(...)`` with explicit start/duration).  The mesh
+  engine runs windows as fused device scans, so per-worker compute and
+  merge phases are *modeled* from the same ``NetworkModel`` arithmetic
+  that produces ``wall_ticks`` — which is exactly what makes the eq.-9
+  compute/communication overlap visible in Perfetto without
+  de-optimising the hot path.
+
+Counters (``tracer.counter``) become Chrome ``"C"`` events — Perfetto
+renders them as per-process line charts (distortion and codebook
+divergence over the run).
+
+``Tracer(enabled=False)`` (or the shared ``NULL_TRACER``) makes every
+call a constant-time no-op so instrumented code paths stay on the
+<3% overhead budget the obs bench gate enforces.
+
+The exported file is plain Chrome trace-event JSON: open it at
+https://ui.perfetto.dev (or chrome://tracing).  ``ts``/``dur`` are
+microseconds; one Perfetto "process" per logical process (host, ticks),
+one "thread" per track (worker, tier, host thread).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import threading
+import time
+from typing import Any
+
+
+@dataclasses.dataclass(slots=True)
+class SpanEvent:
+    """One completed (or still-open) span on the trace timeline."""
+
+    name: str
+    start_us: float
+    dur_us: float | None           # None while the span is still open
+    process: str                   # Perfetto process (pid) label
+    track: str                     # Perfetto thread (tid) label
+    attrs: dict[str, Any]
+
+
+@dataclasses.dataclass(slots=True)
+class CounterEvent:
+    """One sample of a numeric series (Chrome ``"C"`` counter event)."""
+
+    name: str
+    value: float
+    ts_us: float
+    process: str
+
+
+class Tracer:
+    """Append-only span/counter recorder; thread-safe; monotonic-clock.
+
+    ``process``/``track`` name the Perfetto lanes.  Wall spans default to
+    ``process="host"`` and the current thread's name; modeled spans pick
+    their own (e.g. ``process="ticks", track="worker 3"``).
+    """
+
+    WALL_PROCESS = "host"
+    TICK_PROCESS = "ticks"
+
+    def __init__(self, *, enabled: bool = True):
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._spans: list[SpanEvent] = []
+        self._counters: list[CounterEvent] = []
+        self._open = 0                    # wall spans entered but not exited
+        self._t0_ns = time.monotonic_ns()
+
+    # -- clock ---------------------------------------------------------------
+
+    def now_us(self) -> float:
+        """Microseconds since this tracer was created (monotonic)."""
+        return (time.monotonic_ns() - self._t0_ns) / 1e3
+
+    # -- wall spans ----------------------------------------------------------
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, process: str | None = None,
+             track: str | None = None, **attrs):
+        """Record a real (monotonic-clock) span around the ``with`` body."""
+        if not self.enabled:
+            yield None
+            return
+        ev = SpanEvent(
+            name=name, start_us=self.now_us(), dur_us=None,
+            process=process or self.WALL_PROCESS,
+            track=track or threading.current_thread().name,
+            attrs=attrs)
+        with self._lock:
+            self._spans.append(ev)
+            self._open += 1
+        try:
+            yield ev
+        finally:
+            ev.dur_us = self.now_us() - ev.start_us
+            with self._lock:
+                self._open -= 1
+
+    # -- modeled spans and counters ------------------------------------------
+
+    def add_span(self, name: str, start_us: float, dur_us: float, *,
+                 process: str | None = None, track: str, **attrs) -> None:
+        """Record a span with explicit timestamps (tick-timeline tracks).
+
+        Lock-free: ``list.append`` is atomic under the GIL, and modeled
+        spans are the instrumentation hot path (hundreds per window-scan
+        segment) — this call is on the obs bench's <3% overhead budget.
+        """
+        if not self.enabled:
+            return
+        self._spans.append(SpanEvent(
+            name, float(start_us), max(float(dur_us), 0.0),
+            process or self.TICK_PROCESS, track, attrs))
+
+    def counter(self, name: str, value: float, ts_us: float | None = None, *,
+                process: str | None = None) -> None:
+        """Sample a numeric series (rendered as a Perfetto line chart)."""
+        if not self.enabled:
+            return
+        self._counters.append(CounterEvent(
+            name, float(value),
+            self.now_us() if ts_us is None else float(ts_us),
+            process or self.TICK_PROCESS))
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def open_spans(self) -> int:
+        """Wall spans currently entered but not yet exited."""
+        with self._lock:
+            return self._open
+
+    def spans(self, name: str | None = None) -> list[SpanEvent]:
+        with self._lock:
+            evs = list(self._spans)
+        return evs if name is None else [e for e in evs if e.name == name]
+
+    def counters(self, name: str | None = None) -> list[CounterEvent]:
+        with self._lock:
+            evs = list(self._counters)
+        return evs if name is None else [e for e in evs if e.name == name]
+
+    # -- export --------------------------------------------------------------
+
+    def chrome_events(self) -> list[dict]:
+        """Chrome trace-event dicts (``"X"`` spans, ``"C"`` counters,
+        ``"M"`` metadata naming each process/track)."""
+        with self._lock:
+            spans = list(self._spans)
+            counters = list(self._counters)
+        pids: dict[str, int] = {}
+        tids: dict[tuple[int, str], int] = {}
+        events: list[dict] = []
+
+        def pid_of(process: str) -> int:
+            if process not in pids:
+                pids[process] = len(pids) + 1
+                events.append({"ph": "M", "name": "process_name",
+                               "pid": pids[process], "tid": 0,
+                               "args": {"name": process}})
+            return pids[process]
+
+        def tid_of(pid: int, track: str) -> int:
+            key = (pid, track)
+            if key not in tids:
+                tids[key] = sum(1 for p, _ in tids if p == pid) + 1
+                events.append({"ph": "M", "name": "thread_name",
+                               "pid": pid, "tid": tids[key],
+                               "args": {"name": track}})
+            return tids[key]
+
+        for s in spans:
+            pid = pid_of(s.process)
+            events.append({
+                "ph": "X", "name": s.name, "cat": s.process,
+                "ts": s.start_us,
+                "dur": s.dur_us if s.dur_us is not None else 0.0,
+                "pid": pid, "tid": tid_of(pid, s.track),
+                "args": {**s.attrs,
+                         **({"unclosed": True} if s.dur_us is None else {})},
+            })
+        for c in counters:
+            events.append({"ph": "C", "name": c.name, "ts": c.ts_us,
+                           "pid": pid_of(c.process), "tid": 0,
+                           "args": {c.name: c.value}})
+        return events
+
+    def export_chrome(self, path: str) -> None:
+        """Write a Perfetto-loadable Chrome trace-event JSON file."""
+        doc = {"traceEvents": self.chrome_events(), "displayTimeUnit": "ms"}
+        with open(path, "w") as f:
+            json.dump(doc, f)
+
+
+NULL_TRACER = Tracer(enabled=False)

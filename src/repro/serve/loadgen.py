@@ -23,6 +23,7 @@ import jax
 import numpy as np
 
 from repro.engine.network import InstantNetwork, NetworkModel
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from repro.serve.codebook_store import CodebookStore
 from repro.serve.service import QuantizeService
 
@@ -69,7 +70,8 @@ def run_load(service: QuantizeService, *, n_requests: int, d: int,
              rows_per_request: int = 1, network: NetworkModel | None = None,
              tick_s: float = 0.0, key: jax.Array | None = None,
              store: CodebookStore | None = None,
-             timeout_s: float = 120.0) -> LoadReport:
+             timeout_s: float = 120.0, tracer: Tracer | None = None,
+             metrics: MetricsRegistry | None = None) -> LoadReport:
     """Drive ``service`` with ``n_requests`` open-loop requests.
 
     ``tick_s=0`` (or ``InstantNetwork``) submits back-to-back — the
@@ -80,6 +82,7 @@ def run_load(service: QuantizeService, *, n_requests: int, d: int,
         raise ValueError(f"n_requests must be >= 1, got {n_requests}")
     network = network or InstantNetwork()
     store = store or service.store
+    tracer = tracer if tracer is not None else NULL_TRACER
     key = jax.random.PRNGKey(0) if key is None else key
     kq, ka = jax.random.split(key)
     queries = np.asarray(jax.random.normal(
@@ -98,25 +101,29 @@ def run_load(service: QuantizeService, *, n_requests: int, d: int,
         return cb
 
     t0 = time.monotonic()
-    next_t = t0
-    for i in range(n_requests):
-        next_t += gaps[i]
-        now = time.monotonic()
-        if next_t > now:
-            time.sleep(next_t - now)
-        scheduled.append(max(next_t, t0))
-        fut = service.submit(queries[i])
-        fut.add_done_callback(_mark(i))
-        futures.append(fut)
+    with tracer.span("load", requests=n_requests,
+                     rows_per_request=rows_per_request):
+        with tracer.span("submit"):
+            next_t = t0
+            for i in range(n_requests):
+                next_t += gaps[i]
+                now = time.monotonic()
+                if next_t > now:
+                    time.sleep(next_t - now)
+                scheduled.append(max(next_t, t0))
+                fut = service.submit(queries[i])
+                fut.add_done_callback(_mark(i))
+                futures.append(fut)
 
-    failed = 0
-    responses = []
-    for fut in futures:
-        try:
-            responses.append(fut.result(timeout=timeout_s))
-        except Exception:  # noqa: BLE001 — counted, reported, not raised
-            responses.append(None)
-            failed += 1
+        failed = 0
+        responses = []
+        with tracer.span("collect"):
+            for fut in futures:
+                try:
+                    responses.append(fut.result(timeout=timeout_s))
+                except Exception:  # noqa: BLE001 — counted, not raised
+                    responses.append(None)
+                    failed += 1
     wall_s = time.monotonic() - t0
 
     lat_ms, versions, staleness = [], [], []
@@ -135,6 +142,16 @@ def run_load(service: QuantizeService, *, n_requests: int, d: int,
     lat = np.asarray(lat_ms) if ok else np.asarray([0.0])
     versions_arr = np.asarray(versions) if ok else np.asarray([0])
     stale = np.asarray(staleness) if ok else np.asarray([0])
+    if metrics is not None:
+        h = metrics.histogram("serve_latency_ms")
+        for v in lat_ms:
+            h.observe(v)
+        metrics.counter("serve_requests").inc(n_requests)
+        if failed:
+            metrics.counter("serve_load_failed").inc(failed)
+        g = metrics.gauge("serve_staleness")
+        for s in staleness:
+            g.set(s)
     return LoadReport(
         requests=n_requests,
         rows=n_requests * rows_per_request,
