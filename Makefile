@@ -9,15 +9,17 @@
 #   make bench-hier    — flat vs hierarchical (2x4) wall + per-tier wire bytes -> BENCH_hier.json
 #   make bench-obs     — instrumented-vs-bare tracing overhead + traced 2-host
 #                        run -> BENCH_obs.json (the <=1.03x obs gate input)
+#   make bench-chaos   — seeded fault-injection run (kills + straggler +
+#                        partition) vs the fault-free oracle -> BENCH_chaos.json
 #   make serve-smoke   — quantization service end to end: live elastic trainer
 #                        hot-swapping codebooks under open-loop load
 #   make trace-smoke   — 2-host traced + metered train run, then the trace
 #                        invariant checker (repro.obs.check) on the export
 #   make ci-local      — mirror the full CI matrix locally (lint, tier-1 under
 #                        1 AND 8 forced devices, fresh engine + serve benches +
-#                        the regression gates, the obs overhead gate, and the
-#                        trace-invariant smoke) so CI failures reproduce
-#                        without pushing
+#                        the regression gates, the obs overhead gate, the
+#                        chaos fault-injection gate, and the trace-invariant
+#                        smoke) so CI failures reproduce without pushing
 #   make example-mesh  — the 8-device mesh demo against the sim oracles
 #   make example-elastic — the 8->4->8 elastic resharding demo
 #   make example-serve — the train-while-serve demo (examples/serve_vq.py)
@@ -27,8 +29,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
 
 .PHONY: test lint bench-smoke bench-engine bench-elastic bench-serve \
-        bench-comm bench-hier bench-obs serve-smoke trace-smoke ci-local \
-        example-mesh example-elastic example-serve
+        bench-comm bench-hier bench-obs bench-chaos serve-smoke \
+        trace-smoke ci-local example-mesh example-elastic example-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -61,6 +63,9 @@ bench-hier:
 
 bench-obs:
 	$(PY) -m benchmarks.run --suite obs --quick
+
+bench-chaos:
+	$(PY) -m benchmarks.run --suite chaos --quick
 
 serve-smoke:
 	$(PY) -m repro.launch.serve --mode vq --smoke --train-publish
@@ -96,6 +101,9 @@ ci-local: lint
 	$(PY) -m benchmarks.run --suite obs --quick --out BENCH_obs.fresh.json
 	$(PY) -m benchmarks.check_regression \
 		--baseline BENCH_obs.json --fresh BENCH_obs.fresh.json
+	$(PY) -m benchmarks.run --suite chaos --quick --out BENCH_chaos.fresh.json
+	$(PY) -m benchmarks.check_regression \
+		--baseline BENCH_chaos.json --fresh BENCH_chaos.fresh.json
 	$(MAKE) trace-smoke
 	$(PY) -m benchmarks.run --suite elastic --quick --out BENCH_elastic.fresh.json
 

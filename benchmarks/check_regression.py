@@ -72,6 +72,24 @@ committed ``BENCH_obs.json`` and FAILS when:
     the ``codebook_divergence`` counter present (functional,
     machine-independent).
 
+**chaos**: diffs a fresh ``--suite chaos --quick`` output against the
+committed ``BENCH_chaos.json`` and FAILS when:
+
+  * the seeded kill/slow/partition event schedule differs from the
+    baseline (the same seed MUST draw the identical events on every
+    device count — the chaos suite's determinism pin);
+  * the quorum-merge wire bytes differ (trace-exact, like comm/hier);
+  * the faulted run's final distortion over the fault-free oracle
+    exceeds ``--max-chaos-distortion`` (default 1.25 — the acceptance
+    bound: surviving 2 kills + 1 straggler + 1 partition costs < 25%%
+    distortion); or the final distortion diverges from the baseline
+    beyond ``--curve-rtol``; or the chaos trace (``chaos_*`` spans)
+    violated the ``repro.obs.check`` invariants.
+
+  ``--absolute`` gates the FRESH output alone on the absolute bars
+  (distortion bound + trace invariants) with no baseline file — the
+  cron seed sweep runs seeds that have no committed baseline.
+
 All suites additionally WARN (never fail) when the baseline's recorded
 per-iteration ``wall_samples`` spread exceeds the regression threshold:
 a ratio FAIL against such a baseline is as likely noise as regression,
@@ -80,7 +98,9 @@ the gate.
 
 Exit codes: 0 pass, 1 regression, 2 usage/config mismatch (e.g. the fresh
 run used a different n/tau/d than the baseline — the comparison would be
-meaningless, so that is an error, not a pass).
+meaningless, so that is an error, not a pass), 3 baseline or fresh file
+missing/unreadable (a SETUP failure, distinct from a perf regression so
+CI can route it to the right owner).
 
     python -m benchmarks.check_regression \
         --baseline BENCH_engine.json --fresh BENCH_engine.fresh.json
@@ -459,6 +479,86 @@ def check_obs(baseline: dict, fresh: dict, *,
     return ok, msgs
 
 
+def check_chaos(baseline: dict | None, fresh: dict, *,
+                max_chaos_distortion: float = 1.25,
+                curve_rtol: float = 1e-2) -> tuple[bool, list[str]]:
+    """Chaos-suite gate; same contract as ``check``.
+
+    ``baseline=None`` is the ``--absolute`` mode used by the cron seed
+    sweep: only the absolute bars apply (distortion-ratio ceiling over
+    the fault-free oracle + trace invariants) since sweep seeds have no
+    committed baseline to diff against.
+    """
+    msgs: list[str] = []
+    ok = True
+
+    f = _serve_rec(fresh, "chaos")
+    if f is None:
+        raise ValueError("chaos suite needs a 'chaos' record in the fresh "
+                         "output — regenerate with "
+                         "benchmarks.run --suite chaos")
+
+    if baseline is not None:
+        b = _serve_rec(baseline, "chaos")
+        if b is None:
+            raise ValueError("chaos baseline has no 'chaos' record — "
+                             "regenerate with benchmarks.run --suite chaos")
+        cfg = ("seed", "m", "n", "d", "kappa", "tau", "hosts", "quorum_frac")
+        b_cfg = tuple(b.get(k) for k in cfg)
+        f_cfg = tuple(f.get(k) for k in cfg)
+        if b_cfg != f_cfg:
+            raise ValueError(
+                f"chaos config mismatch baseline={b_cfg} fresh={f_cfg} — "
+                f"regenerate the baseline (benchmarks.run --suite chaos) "
+                f"instead of comparing different runs")
+        # determinism pin: the same seed must draw the identical
+        # kill/slow/partition schedule on every device count
+        if b.get("events") != f.get("events"):
+            ok = False
+            msgs.append("FAIL chaos schedule drifted from baseline — same "
+                        "seed must draw identical events "
+                        f"(baseline {b.get('events')} != "
+                        f"fresh {f.get('events')})")
+        else:
+            msgs.append(f"ok   seeded schedule: {len(f.get('events', []))} "
+                        f"events, identical to baseline")
+        wire = (b.get("merge_wire_bytes"), f.get("merge_wire_bytes"))
+        if wire[0] != wire[1]:
+            ok = False
+            msgs.append(f"FAIL quorum-merge wire bytes drifted "
+                        f"{wire[0]} -> {wire[1]} B (masked-collective "
+                        f"accounting or structure changed)")
+        else:
+            msgs.append(f"ok   quorum merge wire {wire[1]} B (exact)")
+        err = (abs(f["final_C"] - b["final_C"])
+               / (abs(b["final_C"]) + 1e-12))
+        if err > curve_rtol:
+            ok = False
+            msgs.append(f"FAIL chaos final distortion diverged from "
+                        f"baseline: rel err {err:.2e} > {curve_rtol:.0e}")
+        else:
+            msgs.append(f"ok   chaos final distortion rel err {err:.2e}")
+
+    line = (f"distortion ratio vs fault-free oracle "
+            f"{f['distortion_ratio']:.4f} "
+            f"(bound {max_chaos_distortion:.2f}, "
+            f"{len(f.get('resizes', []))} unscheduled resizes survived)")
+    if f["distortion_ratio"] > max_chaos_distortion:
+        ok = False
+        msgs.append(f"FAIL {line}")
+    else:
+        msgs.append(f"ok   {line}")
+
+    if not f.get("trace_ok", False):
+        ok = False
+        msgs.append("FAIL chaos trace violated invariants: "
+                    + "; ".join(f.get("trace_errors", ["(no detail)"])[:3]))
+    else:
+        msgs.append("ok   chaos trace: chaos_* spans present, "
+                    "invariants hold")
+    return ok, msgs
+
+
 def _sample_tag(rec: dict) -> str:
     """Short human tag for a BENCH record carrying raw samples."""
     for keys in (("executor", "m"), ("kind", "scheme"),
@@ -509,22 +609,44 @@ def main(argv=None) -> int:
                     help="obs suite: absolute ceiling for the live-"
                          "instrumentation wall overhead (1.03 = the <3%% "
                          "acceptance bar)")
+    ap.add_argument("--max-chaos-distortion", type=float, default=1.25,
+                    help="chaos suite: absolute ceiling for the faulted "
+                         "run's final distortion over the fault-free "
+                         "oracle (1.25 = within 25%%)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="chaos suite: gate the fresh output on the "
+                         "absolute bars alone, no baseline file (the "
+                         "cron seed sweep runs seeds with no committed "
+                         "baseline)")
     args = ap.parse_args(argv)
     try:
-        with open(args.baseline) as fh:
-            baseline = json.load(fh)
         with open(args.fresh) as fh:
             fresh = json.load(fh)
+        baseline = None
+        if not args.absolute:
+            with open(args.baseline) as fh:
+                baseline = json.load(fh)
     except (OSError, json.JSONDecodeError) as e:
-        # JSONDecodeError: a truncated fresh file (bench killed mid-write)
-        # is a usage error, not a crash
-        print(f"error: {e}", file=sys.stderr)
-        return 2
-    suites = (baseline.get("suite", "engine"), fresh.get("suite", "engine"))
-    if suites[0] != suites[1]:
-        print(f"error: baseline suite {suites[0]!r} != fresh {suites[1]!r}",
+        # exit 3, distinct from config-mismatch (2) and regression (1):
+        # a missing/truncated benchmark file is a SETUP failure and CI
+        # must not report it as either a perf regression or a pass
+        print(f"error: missing or unreadable benchmark file: {e}",
               file=sys.stderr)
-        return 2
+        return 3
+    if args.absolute:
+        suite = fresh.get("suite", "engine")
+        if suite != "chaos":
+            print(f"error: --absolute only applies to the chaos suite, "
+                  f"fresh is {suite!r}", file=sys.stderr)
+            return 2
+        suites = ("chaos", "chaos")
+    else:
+        suites = (baseline.get("suite", "engine"),
+                  fresh.get("suite", "engine"))
+        if suites[0] != suites[1]:
+            print(f"error: baseline suite {suites[0]!r} != fresh "
+                  f"{suites[1]!r}", file=sys.stderr)
+            return 2
     try:
         if suites[0] == "serve":
             ok, msgs = check_serve(
@@ -546,6 +668,11 @@ def main(argv=None) -> int:
         elif suites[0] == "obs":
             ok, msgs = check_obs(baseline, fresh,
                                  max_overhead=args.max_obs_overhead)
+        elif suites[0] == "chaos":
+            ok, msgs = check_chaos(
+                baseline, fresh,
+                max_chaos_distortion=args.max_chaos_distortion,
+                curve_rtol=args.curve_rtol)
         else:
             ok, msgs = check(baseline, fresh,
                              max_ratio_regression=args.max_ratio_regression,
@@ -555,7 +682,8 @@ def main(argv=None) -> int:
         return 2
     thresh = (args.max_obs_overhead - 1.0 if suites[0] == "obs"
               else args.max_ratio_regression - 1.0)
-    msgs += variance_warnings(baseline, threshold=thresh)
+    if baseline is not None:
+        msgs += variance_warnings(baseline, threshold=thresh)
     for m in msgs:
         print(m)
     print("benchmark regression gate:", "PASS" if ok else "FAIL")

@@ -7,6 +7,7 @@ benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run --suite serve    # lookup service
     PYTHONPATH=src python -m benchmarks.run --suite hier     # flat vs 2-tier
     PYTHONPATH=src python -m benchmarks.run --suite obs      # tracing cost
+    PYTHONPATH=src python -m benchmarks.run --suite chaos    # fault injection
 """
 
 from __future__ import annotations
@@ -681,6 +682,119 @@ def bench_obs(*, quick: bool = False,
     return rows
 
 
+def bench_chaos(*, quick: bool = False, out_path: str = "BENCH_chaos.json",
+                seed: int = 7) -> list[str]:
+    """Survive the cloud the paper ran on: a seeded kill/slow/partition
+    schedule (2 worker deaths -> unscheduled elastic resizes, 1 straggler +
+    1 host-group partition -> quorum-merge late folds) against the
+    fault-free fixed-M oracle on the SAME sample budget.
+
+      * ``chaos``  — the faulted run: final distortion over the oracle's
+        (``distortion_ratio``, the acceptance bound), quorum-merge wire
+        bytes (masked collective, trace-exact), recovery wall cost (the
+        summed kill-resize pauses), and the full event schedule (the
+        seeded-determinism pin: same seed => byte-identical events on
+        every device count).
+      * ``trace``  — the tracer ran live during the chaos run; the
+        exported events must pass ``check_trace`` with the ``chaos_*``
+        spans and the late-worker counter present.
+
+    CPU wall numbers are a harness, not TPU-indicative; the gate pins the
+    machine-independent quantities (events, wire bytes, distortion ratio).
+    """
+    from repro.data import synthetic
+    from repro.engine import (ChaosNetwork, ChaosSchedule,
+                              ElasticMeshExecutor, InstantNetwork,
+                              MeshExecutor, ResizeSchedule)
+    from repro.obs import MetricsRegistry, Tracer, check_trace
+
+    n, d, kappa, tau = (400 if quick else 800), 8, 16, 10
+    m = min(8, len(jax.devices()))
+    hosts, quorum_frac = 2, 0.6
+    kills = min(2, m - 1)
+    schedule = ChaosSchedule.generate(
+        seed, windows=n // tau, m=m, kills=kills, slows=1, partitions=1,
+        hosts=hosts)
+    key = jax.random.PRNGKey(0)
+    kd, kw = jax.random.split(key)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, :200]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+
+    # fault-free oracle: the fixed-M delta run on the same sample budget
+    oracle = MeshExecutor(network=InstantNetwork())
+    run_o = lambda: jax.block_until_ready(  # noqa: E731
+        oracle.run("delta", w0, data, eval_data, tau=tau).w_shared)
+    run_o()  # compile
+    res_o = oracle.run("delta", w0, data, eval_data, tau=tau)
+    jax.block_until_ready(res_o.w_shared)
+
+    tracer, registry = Tracer(), MetricsRegistry()
+    net = ChaosNetwork(InstantNetwork(), schedule)
+    ex = ElasticMeshExecutor(ResizeSchedule([]), network=net, chaos=schedule,
+                             merge="quorum", quorum_frac=quorum_frac,
+                             tracer=tracer, metrics=registry)
+    jax.block_until_ready(
+        ex.run("delta", w0, data, eval_data, tau=tau).w_shared)  # compile
+    tracer, registry = Tracer(), MetricsRegistry()
+    ex.tracer = tracer
+    ex.metrics = registry
+    for mex in ex._mesh_ex.values():
+        mex.tracer, mex.metrics = tracer, registry
+    t0 = time.perf_counter()
+    res = ex.run("delta", w0, data, eval_data, tau=tau)
+    jax.block_until_ready(res.w_shared)
+    wall_s = time.perf_counter() - t0
+    recovery_s = sum(e.wall_s for e in ex.resize_events
+                     if e.cause == "chaos_kill")
+    merge_b = ex.last_comm["by_tag"].get("merge", {"wire_bytes": 0,
+                                                   "logical_bytes": 0})
+    final_c = float(res.distortion[-1])
+    final_o = float(res_o.distortion[-1])
+    ratio = final_c / final_o
+
+    events = tracer.chrome_events()
+    expect = [f"chaos_{e.kind}" for e in schedule]
+    errors = check_trace(events, expect_spans=sorted(set(expect)))
+    trace_ok = not errors
+    trace_path = os.path.splitext(out_path)[0] + ".trace.json"
+    tracer.export_chrome(trace_path)
+
+    rows = [
+        f"chaos_seed{seed}_M{m},{wall_s * 1e6:.0f},"
+        f"distortion_ratio={ratio:.4f} final_C={final_c:.5f}"
+        f" oracle_C={final_o:.5f} kills={kills}"
+        f" recovery_s={recovery_s:.4f}",
+        f"chaos_merge_wire,0,wire_B={merge_b['wire_bytes']}"
+        f" logical_B={merge_b['logical_bytes']}",
+        f"chaos_schedule,0,{schedule.describe()}",
+        f"chaos_trace,0,ok={trace_ok} -> {trace_path}"
+        + ("" if trace_ok else " errors=" + "; ".join(errors[:3])),
+    ]
+    records = [{
+        "kind": "chaos",
+        "seed": seed, "m": m, "n": n, "d": d, "kappa": kappa, "tau": tau,
+        "hosts": hosts, "quorum_frac": quorum_frac,
+        "events": [e.as_dict() for e in schedule],
+        "final_C": final_c, "final_C_oracle": final_o,
+        "distortion_ratio": ratio,
+        "merge_wire_bytes": merge_b["wire_bytes"],
+        "merge_logical_bytes": merge_b["logical_bytes"],
+        "wall_s": wall_s, "recovery_wall_s": recovery_s,
+        "resizes": [{"window": e.window, "old_m": e.old_m,
+                     "new_m": e.new_m, "cause": e.cause,
+                     "late_points": e.late_points,
+                     "wall_s": e.wall_s} for e in ex.resize_events],
+        "trace_ok": trace_ok, "trace_errors": errors,
+    }]
+    with open(out_path, "w") as f:
+        json.dump({"suite": "chaos", "devices": len(jax.devices()),
+                   "backend": jax.default_backend(),
+                   "results": records}, f, indent=1)
+    rows.append(f"chaos_records,0,wrote {out_path} ({len(records)} records)")
+    return rows
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -696,6 +810,7 @@ BENCHES = {
     "comm": bench_comm,
     "hier": bench_hier,
     "obs": bench_obs,
+    "chaos": bench_chaos,
 }
 
 # named groups runnable as `--suite NAME`
@@ -706,6 +821,7 @@ SUITES = {
     "comm": ["comm"],
     "hier": ["hier"],
     "obs": ["obs"],
+    "chaos": ["chaos"],
     "paper": ["fig1", "fig2", "fig3", "fig4"],
     "lm": ["throughput", "decode"],
 }
@@ -716,7 +832,8 @@ _JSON_BENCHES = {"engine": "BENCH_engine.json",
                  "serve": "BENCH_serve.json",
                  "comm": "BENCH_comm.json",
                  "hier": "BENCH_hier.json",
-                 "obs": "BENCH_obs.json"}
+                 "obs": "BENCH_obs.json",
+                 "chaos": "BENCH_chaos.json"}
 
 
 def suite_out_path(out: str, name: str, *, multi: bool) -> str:
@@ -739,6 +856,10 @@ def main() -> None:
     ap.add_argument("--only", choices=sorted(BENCHES))
     ap.add_argument("--suite", choices=sorted(SUITES))
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--chaos-seed", type=int, default=7,
+                    help="chaos suite: seed the kill/slow/partition "
+                         "schedule is drawn from (the cron sweep matrixes "
+                         "over this)")
     ap.add_argument("--out", default="",
                     help="JSON output path for the engine/elastic/serve "
                          "suites (default: the committed BENCH_<name>.json "
@@ -770,6 +891,8 @@ def main() -> None:
             kwargs = {"quick": args.quick,
                       "out_path": suite_out_path(args.out, name,
                                                  multi=multi)}
+            if name == "chaos":
+                kwargs["seed"] = args.chaos_seed
         try:
             for row in BENCHES[name](**kwargs):
                 print(row)

@@ -19,10 +19,12 @@ with per-call wire-byte accounting).
 
 from repro.comm import HierarchicalTransport, Transport, get_transport
 from repro.engine.api import SCHEMES, Executor, get_executor
+from repro.engine.chaos import ChaosEvent, ChaosNetwork, ChaosSchedule
 from repro.engine.elastic import (ElasticMeshExecutor, ResizeEvent,
                                   ResizeSchedule)
 from repro.engine.merge import (AsyncDeltaMerge, AverageMerge, DeltaMerge,
-                                MergeStrategy, SparseDeltaMerge, get_merge)
+                                MergeStrategy, QuorumMerge, SparseDeltaMerge,
+                                get_merge)
 from repro.engine.mesh import MeshExecutor, make_worker_mesh
 from repro.engine.network import (FixedLatencyNetwork, GeometricDelayNetwork,
                                   InstantNetwork, NetworkModel, get_network)
@@ -34,9 +36,10 @@ __all__ = [
     "SCHEMES", "Executor", "get_executor",
     "Transport", "get_transport", "HierarchicalTransport", "Topology",
     "MergeStrategy", "AverageMerge", "DeltaMerge", "AsyncDeltaMerge",
-    "SparseDeltaMerge", "get_merge",
+    "SparseDeltaMerge", "QuorumMerge", "get_merge",
     "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",
     "GeometricDelayNetwork", "get_network",
+    "ChaosEvent", "ChaosSchedule", "ChaosNetwork",
     "SimExecutor", "MeshExecutor", "ThreadExecutor", "make_worker_mesh",
     "ElasticMeshExecutor", "ResizeEvent", "ResizeSchedule",
 ]

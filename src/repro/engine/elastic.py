@@ -128,6 +128,10 @@ class ResizeStats:
     # to give the departing workers their in-flight window — the event
     # degraded to 'drop' (the sample budget wins over the staleness model)
     late_skipped: bool = False
+    # what fired this resize: 'schedule' (a planned ResizeEvent) or
+    # 'chaos_kill' (an injected worker death treated as an unscheduled
+    # shrink at the next window barrier)
+    cause: str = "schedule"
 
 
 class ElasticMeshExecutor:
@@ -172,7 +176,10 @@ class ElasticMeshExecutor:
                  checkpointer=None, resume: bool = False,
                  late_policy: str = "merge", staleness_gamma: float = 0.5,
                  resize_cost_ticks: int = 0, on_window=None,
-                 publish_every: int = 1, tracer: Tracer | None = None,
+                 publish_every: int = 1, chaos=None,
+                 checkpoint_every: int | None = None,
+                 merge: str | None = None, quorum_frac: float = 0.6,
+                 tracer: Tracer | None = None,
                  metrics: MetricsRegistry | None = None):
         if not isinstance(schedule, ResizeSchedule):
             schedule = ResizeSchedule(schedule)
@@ -186,6 +193,17 @@ class ElasticMeshExecutor:
         if publish_every < 1:
             raise ValueError(f"publish_every must be >= 1, "
                              f"got {publish_every}")
+        if checkpoint_every is not None:
+            if checkpoint_every < 1:
+                raise ValueError(f"checkpoint_every must be >= 1, "
+                                 f"got {checkpoint_every}")
+            if checkpointer is None:
+                raise ValueError(
+                    "checkpoint_every needs a checkpointer to save to")
+        if merge not in (None, "quorum"):
+            raise ValueError(
+                f"merge override must be None (scheme default) or 'quorum', "
+                f"got {merge!r}")
         self.schedule = schedule
         self.network = network or InstantNetwork()
         self.topology = topology
@@ -208,6 +226,21 @@ class ElasticMeshExecutor:
         # CodebookStore sees one monotone stream over the whole elastic run
         self.on_window = on_window
         self.publish_every = publish_every
+        # chaos schedule: its KILL events become unscheduled shrink-by-one
+        # resizes at the next window barrier (the dead worker's in-flight
+        # delta folds in via the late-delta path, exactly like a scheduled
+        # departure); its slow/partition events ride the quorum merge's
+        # late matrix through a ChaosNetwork passed as ``network``
+        self.chaos = chaos
+        # preemption-safe checkpointing: every ``checkpoint_every`` global
+        # windows the publish hook saves the full elastic state, so a
+        # killed process resumes mid-segment instead of from the last
+        # resize event (serve-while-train restarts without failing queries)
+        self.checkpoint_every = checkpoint_every
+        self._last_ckpt_window = -1
+        # merge override forwarded to every per-M segment executor
+        self.merge = merge
+        self.quorum_frac = quorum_frac
         # one tracer/registry shared by every per-M segment executor, so the
         # whole elastic run lands on one timeline (segments, resizes, comm)
         self.tracer = tracer if tracer is not None else NULL_TRACER
@@ -243,6 +276,8 @@ class ElasticMeshExecutor:
                 self._mesh_ex[m] = MeshExecutor(
                     topology=topo, network=self.network,
                     transport=self.transport, use_pallas=self.use_pallas,
+                    merge=self.merge, quorum_frac=self.quorum_frac,
+                    staleness_gamma=self.staleness_gamma,
                     tracer=self.tracer, metrics=self.metrics)
             else:
                 plan = elastic_lib.plan_remesh(m, prev_data=prev_m,
@@ -251,8 +286,45 @@ class ElasticMeshExecutor:
                 self._mesh_ex[m] = MeshExecutor(
                     mesh=mesh, axis=self.axis, network=self.network,
                     transport=self.transport, use_pallas=self.use_pallas,
+                    merge=self.merge, quorum_frac=self.quorum_frac,
+                    staleness_gamma=self.staleness_gamma,
                     tracer=self.tracer, metrics=self.metrics)
         return self._mesh_ex[m]
+
+    def _segment_hook(self, window_idx: int, t0: int, cursor: int,
+                      cur_m: int, tau: int, wt: int, tick_offset: int):
+        """Build one segment's ``on_window`` adapter: forward the publish
+        hook with the GLOBAL window index, and — when ``checkpoint_every``
+        is set — save the full elastic state every N global windows, so a
+        preempted process resumes mid-segment from the last periodic save
+        instead of replaying everything since the last resize event."""
+        periodic = (self.checkpointer is not None
+                    and self.checkpoint_every is not None)
+        if self.on_window is None and not periodic:
+            return None
+
+        def hook(wi, w, _off=window_idx, _t=t0, _cur=cursor, _m=cur_m,
+                 _tick=tick_offset):
+            gw = _off + wi
+            if self.on_window is not None:
+                self.on_window(gw, w)
+            if (periodic and gw % self.checkpoint_every == 0
+                    and gw > self._last_ckpt_window):
+                with self.tracer.span("checkpoint", step=gw, periodic=True):
+                    state = {"w_srd": jnp.asarray(jax.device_get(w)),
+                             "t": np.asarray(_t + wi * tau, np.int64),
+                             "cursor": np.asarray(_cur + wi * _m * tau,
+                                                  np.int64),
+                             "window": np.asarray(gw, np.int64),
+                             "m": np.asarray(_m, np.int64),
+                             "tick_offset": np.asarray(_tick + wi * wt,
+                                                       np.int64)}
+                    self.checkpointer.save(gw, state)
+                self._last_ckpt_window = gw
+                if self.metrics is not None:
+                    self.metrics.counter("periodic_checkpoints").inc()
+
+        return hook
 
     @staticmethod
     def _eval_streams(eval_pool: jax.Array, m: int) -> jax.Array:
@@ -349,14 +421,27 @@ class ElasticMeshExecutor:
             tick_offset = int(st["tick_offset"])
             resumed = True
 
-        events = [e for e in self.schedule if e.window > window_idx]
+        # one merged boundary list: scheduled resizes plus injected worker
+        # deaths, each an (window, cause, payload) barrier the segment loop
+        # stops at.  A chaos kill's target M is resolved at fire time
+        # (shrink the CURRENT worker set by one) — two kills at different
+        # windows compose to M-2 without the schedule knowing M up front.
+        boundaries: list[tuple[int, str, int]] = [
+            (e.window, "schedule", e.new_m)
+            for e in self.schedule if e.window > window_idx]
+        if self.chaos is not None:
+            boundaries += [
+                (ce.window, "chaos_kill", -1)
+                for ce in self.chaos.kill_events if ce.window > window_idx]
+        boundaries.sort(key=lambda b: (b[0], b[1] != "schedule"))
         ei = 0
         curves: list[np.ndarray] = []
         ticks: list[np.ndarray] = []
         prev_m = cur_m
+        self._last_ckpt_window = window_idx
 
         while True:
-            target = events[ei].window if ei < len(events) else None
+            target = boundaries[ei][0] if ei < len(boundaries) else None
             max_w = (total - cursor) // (cur_m * tau)
             want_w = max_w if target is None else (target - window_idx)
             seg_w = min(max_w, want_w)
@@ -373,11 +458,8 @@ class ElasticMeshExecutor:
                 # assign unconditionally: the per-M executors are cached, so
                 # a previous run's publish adapter must not survive into a
                 # run with the hook cleared
-                mex.on_window = (
-                    None if self.on_window is None else
-                    # offset the segment-local window count to the global one
-                    lambda wi, w, _off=window_idx:
-                    self.on_window(_off + wi, w))
+                mex.on_window = self._segment_hook(
+                    window_idx, t0, cursor, cur_m, tau, wt, tick_offset)
                 mex.publish_every = self.publish_every
                 res = mex.run_segment(
                     scheme, w_srd, seg_data, seg_eval, tau=tau, eps0=eps0,
@@ -391,12 +473,17 @@ class ElasticMeshExecutor:
                 window_idx += seg_w
             if target is None or window_idx < target:
                 break  # no more events, or the pool ran dry before the next
-            ev = events[ei]
+            win, cause, payload = boundaries[ei]
             ei += 1
             prev_m = cur_m
+            # an injected death shrinks the CURRENT worker set by one; the
+            # dead worker's in-flight window folds in via the late-delta
+            # path exactly like a scheduled departure
+            new_m_req = payload if cause == "schedule" else max(1, cur_m - 1)
             w_srd, cur_m, cursor = self._do_resize(
-                ev, w_srd, cur_m, pool, cursor, t0, window_idx, tick_offset,
-                tau=tau, eps0=eps0, decay=decay)
+                ResizeEvent(win, new_m_req), w_srd, cur_m, pool, cursor, t0,
+                window_idx, tick_offset, tau=tau, eps0=eps0, decay=decay,
+                cause=cause)
             tick_offset += self.resize_cost_ticks
 
         self.last_comm = comm.CommLog.summarize(
@@ -431,12 +518,14 @@ class ElasticMeshExecutor:
 
     def _do_resize(self, ev: ResizeEvent, w_srd, cur_m: int, pool, cursor: int,
                    t0: int, window_idx: int, tick_offset: int, *, tau: int,
-                   eps0: float, decay: float):
+                   eps0: float, decay: float, cause: str = "schedule"):
         t_start = time.perf_counter()
         ckpt_step = None
         new_m, plan = self._clamp_m(ev.new_m)
+        if cause == "chaos_kill" and self.metrics is not None:
+            self.metrics.counter("chaos_kills").inc()
         with self.tracer.span("resize", window=window_idx, old_m=cur_m,
-                              new_m=new_m):
+                              new_m=new_m, cause=cause):
             # un-commit the shared prototypes from the old mesh: the segment
             # output is sharded over the outgoing device set, and the next
             # shard_map runs on a different one
@@ -514,5 +603,6 @@ class ElasticMeshExecutor:
             tp_preserved=plan.tp_preserved, late_points=late_pts,
             checkpoint_step=ckpt_step,
             wall_s=wall_s,
-            late_skipped=late_skipped))
+            late_skipped=late_skipped,
+            cause=cause))
         return w_srd, new_m, cursor

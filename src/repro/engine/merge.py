@@ -26,6 +26,7 @@ state stays the bare delta tree it has always been.
 
 from __future__ import annotations
 
+import math
 from typing import Any
 
 import jax
@@ -174,20 +175,92 @@ class AsyncDeltaMerge(MergeStrategy):
         return merged, self._join_state(tree_sub_f32(w0, w_local), tsp)
 
 
+class QuorumMerge(MergeStrategy):
+    """Straggler-tolerant eq. (8): proceed when K of M deltas arrive.
+
+    Each window, every worker ships its displacement plus any carried
+    (not-yet-landed) delta, masked by an arrival bit from the network
+    model's late matrix; the merge COUNTS the arrivals on the same masked
+    collective and applies the landed sum only when at least
+    ``ceil(quorum_frac * M)`` workers made the deadline.  A late worker's
+    delta is not lost: it rides the worker's carry, damped by one
+    ``staleness_scale(1, gamma)`` factor per window it waits (Patra's
+    staleness-tolerant analysis — the same eq.-8 stale-window rule
+    ``engine.elastic`` applies to departing workers), and lands with the
+    next quorum.  When no ``late`` bit is supplied every worker arrives,
+    the quorum is trivially met, and the merge is numerically the plain
+    ``DeltaMerge``.
+
+    ``state`` carries the per-worker pending-delta tree (f32, zeros
+    initially).  The arrival count rides the transport's masked reduce —
+    no raw collective appears at this layer (CI pins engine code
+    lax.psum-free), and the scalar's 4 bytes are part of the quorum
+    merge's exactly-pinned wire accounting.
+    """
+
+    name = "quorum"
+    own_state = True
+
+    def __init__(self, transport: comm.Transport | None = None, *,
+                 quorum_frac: float = 0.6, gamma: float = 0.5):
+        if not 0.0 < quorum_frac <= 1.0:
+            raise ValueError(
+                f"quorum_frac must be in (0, 1], got {quorum_frac}")
+        super().__init__(transport)
+        self.quorum_frac = quorum_frac
+        self.gamma = gamma
+
+    def _init_own_state(self, params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def __call__(self, w0, w_local, axis, state=None, *, calls=1,
+                 late=None):
+        from repro.distributed.elastic import staleness_scale
+        carry, tsp = self._split_state(state)
+        if carry is None:
+            raise ValueError("QuorumMerge needs its pending-delta state; "
+                             "seed it with init_state(params)")
+        m = comm.axis_size(axis)
+        k_quorum = max(1, int(math.ceil(self.quorum_frac * m - 1e-9)))
+        s = jnp.asarray(staleness_scale(1, gamma=self.gamma), jnp.float32)
+        delta = tree_sub_f32(w0, w_local)
+        # everything this worker owes the merge: this window's displacement
+        # plus the carried backlog, one window staler than last time
+        ship = jax.tree.map(lambda d, c: d + s * c, delta, carry)
+        arrive = (jnp.asarray(1.0, jnp.float32) if late is None
+                  else 1.0 - jnp.asarray(late, jnp.float32))
+        landed, tsp = self.transport.masked_all_reduce(
+            {"delta": ship, "n": jnp.ones((), jnp.float32)}, arrive, axis,
+            state=tsp, calls=calls)
+        met = (landed["n"] >= k_quorum).astype(jnp.float32)
+        merged = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) - met * d).astype(p.dtype),
+            w0, landed["delta"])
+        # an arrived worker whose quorum landed owes nothing; everyone else
+        # (late, or arrived into a failed quorum) keeps the whole ship
+        keep = 1.0 - met * arrive
+        carry_new = jax.tree.map(lambda sh: keep * sh, ship)
+        return merged, self._join_state(carry_new, tsp)
+
+
 _STRATEGIES = {
     "average": AverageMerge,
     "delta": DeltaMerge,
     "delta_sparse": SparseDeltaMerge,
     "async_delta": AsyncDeltaMerge,
+    "quorum": QuorumMerge,
 }
 
 
 def get_merge(name: str, transport: comm.Transport | None = None,
               **kwargs) -> MergeStrategy:
-    """Factory: 'average' | 'delta' | 'delta_sparse' | 'async_delta'.
+    """Factory: 'average' | 'delta' | 'delta_sparse' | 'async_delta' |
+    'quorum'.
 
     ``transport`` plugs any ``repro.comm`` transport under the strategy
-    (default: dense XLA); ``delta_sparse`` additionally accepts ``frac``.
+    (default: dense XLA); ``delta_sparse`` additionally accepts ``frac``;
+    ``quorum`` accepts ``quorum_frac`` and ``gamma``.
     """
     if name not in _STRATEGIES:
         raise ValueError(

@@ -118,10 +118,19 @@ class MeshExecutor:
                  vmem_budget_bytes: int | None = None,
                  on_window: Callable[[int, jax.Array], None] | None = None,
                  publish_every: int = 1,
+                 merge: str | None = None, quorum_frac: float = 0.6,
+                 staleness_gamma: float = 0.5,
                  tracer: Tracer | None = None,
                  metrics: MetricsRegistry | None = None):
         if not axis:
             raise ValueError("worker axis name must be a non-empty string")
+        if merge not in (None, "quorum"):
+            raise ValueError(
+                f"merge override must be None (scheme default) or 'quorum', "
+                f"got {merge!r}")
+        if not 0.0 < quorum_frac <= 1.0:
+            raise ValueError(
+                f"quorum_frac must be in (0, 1], got {quorum_frac}")
         if topology is not None:
             if mesh is not None:
                 raise ValueError(
@@ -147,6 +156,13 @@ class MeshExecutor:
         self.use_pallas = use_pallas
         self.eval_every = eval_every
         self.vmem_budget_bytes = vmem_budget_bytes
+        # merge override: None = the scheme's own strategy (the default,
+        # byte-identical program); "quorum" = straggler-tolerant eq. 8
+        # (delta scheme only), proceeding on ceil(quorum_frac * M) arrivals
+        # and folding late deltas via the stale-window rule
+        self.merge = merge
+        self.quorum_frac = quorum_frac
+        self.staleness_gamma = staleness_gamma
         # publication hook: when set, the sync schemes run in host-level
         # chunks of ``publish_every`` windows (numerically identical — the
         # window scan is sequential either way) and ``on_window(windows_done,
@@ -355,7 +371,24 @@ class MeshExecutor:
         m = data.shape[0]
         n = data.shape[1]
         n_windows = n // tau
-        strategy = merge_lib.get_merge(scheme, transport=self.transport)
+        quorum = self.merge == "quorum"
+        if quorum:
+            if scheme != "delta":
+                raise ValueError(
+                    "the quorum merge folds eq.-8 displacements, so it rides "
+                    f"scheme 'delta' only; got scheme {scheme!r}")
+            strategy = merge_lib.get_merge(
+                "quorum", transport=self.transport,
+                quorum_frac=self.quorum_frac, gamma=self.staleness_gamma)
+            # host-side lateness schedule: (m, n_windows) arrival-miss bits
+            # drawn from the network model (and any chaos schedule wrapping
+            # it), keyed by GLOBAL window so elastic segments stay aligned
+            late_np = np.asarray(
+                self.network.late_matrix(m, n_windows, tau,
+                                         window0=t0 // tau), np.float32)
+        else:
+            strategy = merge_lib.get_merge(scheme, transport=self.transport)
+            late_np = None
         transport = self.transport
         use_pallas = self.use_pallas
         vmem_budget = self.vmem_budget_bytes
@@ -377,19 +410,25 @@ class MeshExecutor:
         # compiled program's outputs
         observe = self.tracer.enabled or self.metrics is not None
 
-        def body(w0_in, t0_in, ms_in, data_l, eval_l):
+        def body(w0_in, t0_in, ms_in, data_l, eval_l, *late_in):
             stream = data_l[0]                       # (n, d) local shard
             windows = stream[: n_windows * tau].reshape(n_windows, tau, -1)
             ev = eval_l[0]                           # (n_eval, d)
             ms0 = jax.tree.map(lambda x: x[0], ms_in)  # drop worker dim
+            xs = (windows, late_in[0][0]) if quorum else (windows,)
 
-            def window(carry, zwin):
+            def window(carry, x):
+                zwin = x[0]
                 w_srd, t, ms = carry
                 _, w_fin = _local_window(w_srd, zwin, t, eps0=eps0,
                                          decay=decay, use_pallas=use_pallas,
                                          vmem_budget=vmem_budget)
-                w_srd, ms = strategy(w_srd, w_fin, axis, ms,
-                                     calls=n_windows)
+                if quorum:
+                    w_srd, ms = strategy(w_srd, w_fin, axis, ms,
+                                         calls=n_windows, late=x[1])
+                else:
+                    w_srd, ms = strategy(w_srd, w_fin, axis, ms,
+                                         calls=n_windows)
                 t = t + tau
                 if observe:
                     # one stacked reduce for (distortion, divergence): the
@@ -407,7 +446,7 @@ class MeshExecutor:
                 return (w_srd, t, ms), c
 
             (w_srd, _, ms_out), ys = jax.lax.scan(
-                window, (w0_in, t0_in, ms0), windows)
+                window, (w0_in, t0_in, ms0), xs)
             ms_out = jax.tree.map(lambda x: x[None], ms_out)
             if observe:
                 return w_srd, ys[0], ys[1], ms_out
@@ -416,19 +455,25 @@ class MeshExecutor:
         cache_key = ("sync", scheme, mesh, w0.shape, data.shape,
                      eval_data.shape, tau, eps0, decay, use_pallas,
                      vmem_budget, observe)
+        if quorum:
+            cache_key += ("quorum", self.quorum_frac, self.staleness_gamma)
 
         def build():
             out_specs = ((P(), P(), P(), P(axis)) if observe
                          else (P(), P(), P(axis)))
+            in_specs = (P(), P(), P(axis), P(axis), P(axis))
+            if quorum:
+                in_specs += (P(axis),)
             return jax.jit(compat.shard_map(
                 body, mesh,
-                in_specs=(P(), P(), P(axis), P(axis), P(axis)),
+                in_specs=in_specs,
                 out_specs=out_specs,
                 axis_names=frozenset(axes), check_vma=False))
 
-        out = self._call_compiled(
-            cache_key, build, w0, jnp.asarray(t0, jnp.int32), merge_state,
-            data, eval_data)
+        args = (w0, jnp.asarray(t0, jnp.int32), merge_state, data, eval_data)
+        if quorum:
+            args += (jnp.asarray(late_np),)
+        out = self._call_compiled(cache_key, build, *args)
         if observe:
             w_final, curve, divergence, ms_out = out
         else:
@@ -446,8 +491,43 @@ class MeshExecutor:
                                 tau=tau, wt=wt, tier_wire=tier_wire,
                                 w_start=t0 // tau, curve=curve,
                                 divergence=divergence)
+            if quorum:
+                self._emit_chaos_obs(w_start=t0 // tau, n_windows=n_windows,
+                                     wt=wt, late_np=late_np)
         return SchemeResult(w_shared=w_final, wall_ticks=ticks,
                             distortion=curve), ms_out
+
+    def _emit_chaos_obs(self, *, w_start: int, n_windows: int, wt: int,
+                        late_np) -> None:
+        """Render injected faults on the trace: one ``chaos_*`` span per
+        scheduled event in this segment's window range (each on its own
+        track — fault intervals overlap freely, and the trace checker pins
+        same-track spans to nest-or-disjoint), plus counters for the
+        quorum merge's late worker-windows and per-kind event totals."""
+        tr, mt = self.tracer, self.metrics
+        n_late = int(late_np.sum())
+        if mt is not None and n_late:
+            mt.counter("chaos_late_worker_windows").inc(n_late)
+        if tr.enabled:
+            tr.counter("chaos_late_workers_per_window", 0.0,
+                       ts_us=float(w_start * wt))
+            for wi in range(n_windows):
+                tr.counter("chaos_late_workers_per_window",
+                           float(late_np[:, wi].sum()),
+                           ts_us=float((w_start + wi + 1) * wt))
+        events_between = getattr(self.network, "events_between", None)
+        if events_between is None:
+            return
+        for ev in events_between(w_start, w_start + n_windows):
+            if mt is not None:
+                mt.counter(f"chaos_{ev.kind}s").inc()
+            if tr.enabled:
+                dur = 1 if ev.kind == "kill" else ev.duration
+                tr.add_span(
+                    f"chaos_{ev.kind}", float(ev.window * wt),
+                    float(dur * wt),
+                    track=f"chaos {ev.kind} {ev.target}@{ev.window}",
+                    window=ev.window, target=ev.target, kind=ev.kind)
 
     def _emit_sync_obs(self, *, scheme: str, m: int, n_windows: int,
                        tau: int, wt: int, tier_wire: dict, w_start: int,

@@ -55,6 +55,20 @@ class NetworkModel:
         del wire_bytes, tier
         return 0
 
+    def late_matrix(self, m: int, n_windows: int, tau: int, *,
+                    window0: int = 0):
+        """(m, n_windows) float32 lateness bits for the SYNC quorum merge:
+        1.0 = that worker's window delta misses the merge deadline (it is
+        folded in late, damped by the eq.-8 stale-window rule, instead of
+        stalling the barrier).  ``window0`` is the global index of the
+        first window (elastic segments resume mid-run).  Host-side numpy,
+        deterministic, device-count independent.  Base model: every worker
+        is always on time, so quorum-merge runs over a well-behaved
+        network degenerate to the plain eq.-8 merge."""
+        import numpy as np
+        del tau, window0
+        return np.zeros((m, n_windows), np.float32)
+
 
 @dataclasses.dataclass(frozen=True)
 class InstantNetwork(NetworkModel):
@@ -135,6 +149,25 @@ class GeometricDelayNetwork(NetworkModel):
         # extra delay keeps the sync/async comparison conservative
         mean_extra = (1.0 - self.p_delay) / self.p_delay
         return tau + int(round(mean_extra))
+
+    def late_matrix(self, m, n_windows, tau, *, window0=0):
+        """Geometric-tail stragglers for the quorum merge: a worker is late
+        when its sampled extra delay exceeds a full window of slack
+        (extra > tau) — the tail mass ``(1-p)^tau`` of the Section 4 cloud
+        model.  Seeded by numpy Philox on ``(p_delay, window0)`` so the
+        draw is identical on every device count and an elastic segment
+        starting at ``window0`` redraws the same global windows."""
+        import numpy as np
+        # one Philox stream PER GLOBAL WINDOW: an elastic segment starting
+        # at window0=k draws exactly the columns a full run drew for
+        # windows k.. — segment boundaries cannot move the fault pattern
+        u = np.stack([
+            np.random.Generator(np.random.Philox(
+                key=[int(self.p_delay * 1e6), window0 + w])).random(m)
+            for w in range(n_windows)], axis=1)
+        extra = np.floor(np.log(np.maximum(u, 1e-12))
+                         / np.log1p(-min(self.p_delay, 1 - 1e-9)))
+        return (np.maximum(extra, 0) > tau).astype(np.float32)
 
 
 _NETWORKS = {

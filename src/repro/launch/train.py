@@ -29,6 +29,16 @@ from the latest resize point:
     PYTHONPATH=src python -m repro.launch.train --mode vq --executor mesh \
         --workers 8 --resize 20:4,40:8 [--ckpt-dir /tmp/ck] [--resume]
 
+Chaos VQ — seeded fault injection over any of the above: ``--chaos
+"7:kill=2,slow=1,part=1"`` draws a deterministic kill/straggler/partition
+schedule from seed 7, turns each death into an unscheduled elastic resize,
+and rides the slow/partitioned workers through the straggler-tolerant
+quorum merge (their deltas fold in late, damped by the stale-window rule):
+
+    PYTHONPATH=src python -m repro.launch.train --mode vq --executor mesh \
+        --workers 8 --scheme delta --chaos 7:kill=2,slow=1,part=1 \
+        [--quorum-frac 0.6]
+
 Runs on whatever devices exist (CPU smoke through full meshes): builds the
 mesh, shards state via the same rules the dry-run proves out, streams the
 deterministic synthetic pipeline, checkpoints asynchronously, and restarts
@@ -116,6 +126,25 @@ def run_vq(args) -> int:
         except ValueError as e:  # bad tier-1 frac / hosts split
             print(f"error: {e}")
             return 2
+    chaos = None
+    if args.chaos:
+        # seeded fault injection: parse the schedule against the run's
+        # window count, wrap the network model so the executors see the
+        # faults, and (below) go elastic if any worker dies
+        from repro.engine import ChaosNetwork, ChaosSchedule
+        if args.executor != "mesh":
+            print(f"error: --chaos injects faults into the mesh executors; "
+                  f"got --executor {args.executor}")
+            return 2
+        try:
+            chaos = ChaosSchedule.from_spec(
+                args.chaos, windows=args.points // args.tau, m=args.workers,
+                hosts=args.hosts if args.hosts > 1 else 2)
+        except ValueError as e:
+            print(f"error: {e}")
+            return 2
+        network = ChaosNetwork(network, chaos, topology=topology)
+        print(f"chaos: {chaos.describe()}")
     if args.resume and not args.resize:
         # only the elastic path has VQ resume state; a plain executor would
         # silently restart from scratch, which is not a resume
@@ -123,8 +152,18 @@ def run_vq(args) -> int:
               "checkpoint at resize events; plain runs have no VQ "
               "checkpoint to restore)")
         return 2
+    # the straggler-tolerant quorum merge (delta scheme only): stragglers'
+    # deltas fold in late instead of stalling the barrier.  --chaos implies
+    # it — an injected fault must not deadlock the merge.
+    merge = "quorum" if (args.chaos or args.quorum) else None
+    if merge is not None and args.scheme != "delta":
+        print(f"error: the quorum merge folds eq.-8 displacements, so "
+              f"--chaos/--quorum need --scheme delta; got {args.scheme!r}")
+        return 2
     ckpt = None
-    if args.resize:
+    needs_elastic = bool(args.resize) or (chaos is not None
+                                          and chaos.kill_events)
+    if needs_elastic:
         if args.executor != "mesh":
             print(f"error: --resize is a mesh-executor feature (elastic "
                   f"resharding of the device mesh); got --executor "
@@ -136,9 +175,12 @@ def run_vq(args) -> int:
             return 2
         ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
         ex_name = "elastic"
-        ex_kw = {"schedule": args.resize, "network": network,
+        ex_kw = {"schedule": args.resize if args.resize else [],
+                 "network": network,
                  "transport": transport, "topology": topology,
-                 "checkpointer": ckpt, "resume": args.resume}
+                 "checkpointer": ckpt, "resume": args.resume,
+                 "chaos": chaos, "merge": merge,
+                 "quorum_frac": args.quorum_frac}
     elif args.executor == "thread":
         # real threads have no tick clock: tick-based NetworkModels don't
         # apply, and silently dropping them would mislabel the run
@@ -156,6 +198,9 @@ def run_vq(args) -> int:
         if args.executor == "mesh":
             ex_kw["transport"] = transport
             ex_kw["topology"] = topology
+            if merge is not None:
+                ex_kw["merge"] = merge
+                ex_kw["quorum_frac"] = args.quorum_frac
     ex_kw["tracer"] = tracer
     ex_kw["metrics"] = metrics
     try:
@@ -286,6 +331,21 @@ def main(argv=None) -> int:
     ap.add_argument("--resize", default="",
                     help="elastic resize schedule 'WINDOW:M,...' (e.g. "
                          "'20:4,40:8'); mesh executor only")
+    ap.add_argument("--chaos", default="",
+                    metavar="SEED:SCHEDULE",
+                    help="seeded fault injection, e.g. '7:kill=2,slow=1,"
+                         "part=1' — draw that many worker deaths, "
+                         "stragglers, and host-group partitions from SEED; "
+                         "kills become unscheduled elastic resizes, "
+                         "slow/partition ride the quorum merge's late "
+                         "matrix; mesh executor + --scheme delta only")
+    ap.add_argument("--quorum", action="store_true",
+                    help="use the straggler-tolerant quorum merge even "
+                         "without --chaos (delta scheme only)")
+    ap.add_argument("--quorum-frac", type=float, default=0.6,
+                    help="quorum merge: fraction of workers whose deltas "
+                         "must arrive for the merge to apply (late deltas "
+                         "fold in damped by the stale-window rule)")
     ap.add_argument("--duration-s", type=float, default=2.0,
                     help="thread backend: wall seconds to run")
     ap.add_argument("--comm-delay-s", type=float, default=0.0,

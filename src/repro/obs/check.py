@@ -16,7 +16,8 @@ Invariants (the structural contract downstream tooling relies on):
 CLI (wired into ``make ci-local``)::
 
     PYTHONPATH=src python -m repro.obs.check out.trace.json \
-        [--expect-merge-tiers 0,1] [--expect-counter codebook_divergence]
+        [--expect-merge-tiers 0,1] [--expect-counter codebook_divergence] \
+        [--expect-span chaos_kill]
 
 Exit 0 = all invariants hold, 1 = violations (listed on stdout).
 """
@@ -41,13 +42,15 @@ def load_trace(path: str) -> list[dict[str, Any]]:
 
 def check_trace(events: list[dict[str, Any]], *,
                 expect_merge_tiers: set[str] | None = None,
-                expect_counters: list[str] | None = None) -> list[str]:
+                expect_counters: list[str] | None = None,
+                expect_spans: list[str] | None = None) -> list[str]:
     """Return a list of human-readable violations (empty = clean)."""
     errors: list[str] = []
     named_pids: set[int] = set()
     named_tids: set[tuple[int, int]] = set()
     seen_merge_tiers: set[str] = set()
     seen_counters: set[str] = set()
+    seen_spans: set[str] = set()
     by_track: dict[tuple[int, int], list[dict]] = {}
 
     for i, ev in enumerate(events):
@@ -71,6 +74,7 @@ def check_trace(events: list[dict[str, Any]], *,
         if ph != "X":
             continue
         name = ev.get("name", "")
+        seen_spans.add(name)
         args = ev.get("args") or {}
         if args.get("unclosed"):
             errors.append(f"event {i}: span {name!r} was never closed")
@@ -122,6 +126,10 @@ def check_trace(events: list[dict[str, Any]], *,
         if cname not in seen_counters:
             errors.append(f"expected counter series {cname!r} absent "
                           f"(saw {sorted(seen_counters) or 'none'})")
+    for sname in expect_spans or []:
+        if sname not in seen_spans:
+            errors.append(f"expected span {sname!r} absent "
+                          f"(saw {sorted(seen_spans) or 'none'})")
     return errors
 
 
@@ -133,6 +141,9 @@ def main(argv=None) -> int:
                          "merge spans (e.g. '0,1' or 'flat')")
     ap.add_argument("--expect-counter", action="append", default=[],
                     help="counter series that must be present (repeatable)")
+    ap.add_argument("--expect-span", action="append", default=[],
+                    help="span names that must be present, e.g. "
+                         "'chaos_kill' (repeatable)")
     args = ap.parse_args(argv)
 
     try:
@@ -143,7 +154,8 @@ def main(argv=None) -> int:
     tiers = (set(args.expect_merge_tiers.split(","))
              if args.expect_merge_tiers else None)
     errors = check_trace(events, expect_merge_tiers=tiers,
-                         expect_counters=args.expect_counter)
+                         expect_counters=args.expect_counter,
+                         expect_spans=args.expect_span)
     n_spans = sum(1 for e in events if e.get("ph") == "X")
     n_counters = sum(1 for e in events if e.get("ph") == "C")
     if errors:

@@ -109,11 +109,24 @@ class CodebookStore:
                 self._cond.wait(left)
             return True
 
-    def publisher(self) -> Callable[[int, jax.Array], None]:
+    def publisher(self, *,
+                  skip_stale: bool = False) -> Callable[[int, jax.Array], None]:
         """An ``on_window(window, w)`` callback that publishes into this
-        store — plug it into ``MeshExecutor``/``ElasticMeshExecutor``."""
+        store — plug it into ``MeshExecutor``/``ElasticMeshExecutor``.
+
+        ``skip_stale=True`` drops publishes whose global window is <= the
+        latest published step: when a preempted trainer resumes from a
+        checkpoint it replays windows the store has already served, and
+        re-publishing them would march the serving codebook BACKWARD
+        mid-query.  Fresh windows after the replayed prefix publish
+        normally, so serve-while-train resumes without failing queries."""
 
         def on_window(window: int, w: jax.Array) -> None:
+            if skip_stale:
+                with self._cond:
+                    latest = self._latest
+                if latest is not None and window <= latest.step:
+                    return
             self.publish(w, step=window)
 
         return on_window

@@ -142,6 +142,14 @@ class Topology:
             raise ValueError(f"worker {worker} outside 0..{self.total_workers - 1}")
         return worker // self.workers_per_host
 
+    def group_members(self, host: int) -> range:
+        """Flat worker indices living on host group ``host`` — the inverse
+        of ``group_of``, e.g. the workers a tier-1 partition takes down."""
+        if not 0 <= host < self.hosts:
+            raise ValueError(f"host {host} outside 0..{self.hosts - 1}")
+        return range(host * self.workers_per_host,
+                     (host + 1) * self.workers_per_host)
+
     # -- mesh construction ---------------------------------------------------
 
     def make_mesh(self, *, model: int | None = None,

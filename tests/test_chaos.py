@@ -1,0 +1,490 @@
+"""Chaos engineering (ISSUE 7): seeded fault injection, the
+straggler-tolerant quorum merge, chaos-kill elasticity, preemption-safe
+checkpointing, and the chaos CI regression gate.
+
+The determinism pin: everything seeded here draws through host-side
+numpy Philox, so the SAME schedule/late-matrix must come out on the
+1-device and the 8-device CI legs — several tests below assert against
+hard-coded event lists for exactly that reason.  Multi-device tests
+carry ``@pytest.mark.devices(n)`` and skip themselves on the small leg.
+"""
+
+import json
+import pathlib
+import sys
+
+from repro.xla_flags import force_host_devices
+
+force_host_devices(8)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.checkpoint.checkpointing import Checkpointer  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.engine import (ChaosEvent, ChaosNetwork,  # noqa: E402
+                          ChaosSchedule, ElasticMeshExecutor,
+                          InstantNetwork, MeshExecutor)
+from repro.engine.network import GeometricDelayNetwork  # noqa: E402
+from repro.launch import train as train_cli  # noqa: E402
+from repro.obs.check import check_trace  # noqa: E402
+from repro.serve.codebook_store import CodebookStore  # noqa: E402
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks import check_regression  # noqa: E402
+
+KEY = jax.random.PRNGKey(42)
+TAU = 10
+
+
+def _setup(m, n=400, d=8, kappa=16):
+    kd, kw = jax.random.split(KEY)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, :200]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+    return data, eval_data, w0
+
+
+# ---------------------------------------------------------------------------
+# ChaosEvent / ChaosSchedule
+# ---------------------------------------------------------------------------
+
+def test_chaos_event_validation():
+    with pytest.raises(ValueError, match="unknown chaos kind"):
+        ChaosEvent(5, "meteor", 0)
+    with pytest.raises(ValueError, match="window must be >= 1"):
+        ChaosEvent(0, "kill", 0)
+    with pytest.raises(ValueError, match="target must be >= 0"):
+        ChaosEvent(5, "kill", -1)
+    with pytest.raises(ValueError, match="duration must be >= 1"):
+        ChaosEvent(5, "slow", 0, duration=0)
+
+
+def test_chaos_schedule_generate_is_seed_deterministic():
+    """Same seed => identical events, on EVERY device count: the schedule
+    is drawn by host-side numpy Philox, never a jax key.  The hard-coded
+    expectation is the committed BENCH_chaos.json config (seed 7), so the
+    1- and 8-device CI legs both pin the exact same draw."""
+    kw = dict(windows=40, m=8, kills=2, slows=1, partitions=1, hosts=2)
+    a = ChaosSchedule.generate(7, **kw)
+    b = ChaosSchedule.generate(7, **kw)
+    assert [e.as_dict() for e in a] == [e.as_dict() for e in b]
+    assert [e.as_dict() for e in a] == [
+        {"window": 10, "kind": "slow", "target": 1, "duration": 3},
+        {"window": 19, "kind": "partition", "target": 1, "duration": 2},
+        {"window": 21, "kind": "kill", "target": 3, "duration": 1},
+        {"window": 27, "kind": "kill", "target": 5, "duration": 1},
+    ]
+    assert a.describe() == ("seed=7: slow@10:1,partition@19:1,"
+                            "kill@21:3,kill@27:5")
+    # a different seed draws a different schedule
+    c = ChaosSchedule.generate(8, **kw)
+    assert [e.as_dict() for e in c] != [e.as_dict() for e in a]
+    # faults land in the middle half with recovery room on both sides
+    assert all(10 <= e.window < 30 for e in a)
+    # kill targets are distinct workers
+    kills = [e.target for e in a.kill_events]
+    assert len(set(kills)) == len(kills) == 2
+
+
+def test_chaos_schedule_generate_validation():
+    with pytest.raises(ValueError, match="at least one must survive"):
+        ChaosSchedule.generate(0, windows=40, m=2, kills=2)
+    with pytest.raises(ValueError, match=">= 8 windows"):
+        ChaosSchedule.generate(0, windows=4, m=8, kills=1)
+    with pytest.raises(ValueError, match="do not fit"):
+        # the fault span of an 8-window run is [2, 6) — 4 slots < 5 events
+        ChaosSchedule.generate(0, windows=8, m=8, kills=2, slows=2,
+                               partitions=1)
+    with pytest.raises(ValueError, match="only die once"):
+        ChaosSchedule([(5, "kill", 1), (7, "kill", 1)])
+    assert len(ChaosSchedule.generate(0, windows=40, m=8)) == 0
+
+
+def test_chaos_schedule_from_spec():
+    s = ChaosSchedule.from_spec("7:kill=2,slow=1,part=1",
+                                windows=40, m=8, hosts=2)
+    g = ChaosSchedule.generate(7, windows=40, m=8, kills=2, slows=1,
+                               partitions=1, hosts=2)
+    assert [e.as_dict() for e in s] == [e.as_dict() for e in g]
+    assert len(ChaosSchedule.from_spec("3:kill=1", windows=40, m=8)) == 1
+
+    for bad in ("banana", ":kill=1", "7:boom=1", "7:kill=x"):
+        with pytest.raises(ValueError, match="bad chaos"):
+            ChaosSchedule.from_spec(bad, windows=40, m=8)
+
+
+def test_chaos_schedule_late_matrix_semantics():
+    s = ChaosSchedule([(3, "kill", 0), (2, "slow", 1, 2),
+                       (4, "partition", 1, 2)], hosts=2)
+    late = s.late_matrix(8, 8)
+    # kill: target row late from its death window onward
+    np.testing.assert_array_equal(late[0], [0, 0, 0, 1, 1, 1, 1, 1])
+    # slow: target row late for `duration` windows
+    np.testing.assert_array_equal(late[1], [0, 0, 1, 1, 0, 0, 0, 0])
+    # partition: EVERY worker of host group 1 (workers 4..7) late at once
+    for w in range(4, 8):
+        np.testing.assert_array_equal(late[w], [0, 0, 0, 0, 1, 1, 0, 0])
+    np.testing.assert_array_equal(late[2], np.zeros(8))
+    # window0 offsets into the same global pattern (elastic segments)
+    np.testing.assert_array_equal(s.late_matrix(8, 5, window0=3),
+                                  late[:, 3:])
+    # targets beyond the live worker count are ignored, not an error
+    assert s.late_matrix(1, 8)[0].sum() == 5  # only the kill row survives
+
+
+# ---------------------------------------------------------------------------
+# GeometricDelayNetwork straggler tail
+# ---------------------------------------------------------------------------
+
+def test_geometric_late_matrix_deterministic_and_segment_aligned():
+    g = GeometricDelayNetwork(0.3)
+    a = g.late_matrix(8, 20, 2)
+    b = g.late_matrix(8, 20, 2)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (8, 20) and a.dtype == np.float32
+    # one Philox stream per GLOBAL window: a segment starting at window0=8
+    # redraws exactly the columns the full run drew for windows 8..19, so
+    # elastic segment boundaries cannot move the straggler pattern
+    np.testing.assert_array_equal(g.late_matrix(8, 12, 2, window0=8),
+                                  a[:, 8:])
+
+
+def test_geometric_late_matrix_tail_quantile():
+    """A worker is late when its geometric extra delay exceeds a window of
+    slack: P(late) = (1-p)^(tau+1).  4096 draws pin the empirical rate."""
+    p, tau = 0.3, 2
+    frac = float(GeometricDelayNetwork(p).late_matrix(64, 64, tau).mean())
+    theory = (1 - p) ** (tau + 1)
+    assert abs(frac - theory) < 0.05
+    # more slack => strictly rarer stragglers
+    frac_slack = float(GeometricDelayNetwork(p).late_matrix(64, 64, 8).mean())
+    assert frac_slack < frac
+
+
+def test_base_network_late_matrix_is_zero():
+    np.testing.assert_array_equal(InstantNetwork().late_matrix(4, 6, TAU),
+                                  np.zeros((4, 6), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# ChaosNetwork composition
+# ---------------------------------------------------------------------------
+
+def test_chaos_network_round_lengths_overlay():
+    sched = ChaosSchedule([(5, "kill", 0), (3, "slow", 1, 2)], hosts=2)
+    cn = ChaosNetwork(InstantNetwork(), sched, slow_factor=4)
+    lengths = np.asarray(cn.round_lengths(jax.random.PRNGKey(0), 4, 10, TAU))
+    # dead worker's post-death rounds never complete
+    np.testing.assert_array_equal(lengths[0, 5:],
+                                  np.full(5, ChaosNetwork.DEAD_TICKS))
+    np.testing.assert_array_equal(lengths[0, :5], np.full(5, TAU))
+    # slowed worker straggles by slow_factor for the fault's duration
+    np.testing.assert_array_equal(lengths[1],
+                                  [10, 10, 10, 40, 40, 10, 10, 10, 10, 10])
+    # healthy workers see the inner model untouched
+    np.testing.assert_array_equal(lengths[2], np.full(10, TAU))
+
+
+def test_chaos_network_late_matrix_is_union_of_inner_and_schedule():
+    sched = ChaosSchedule([(2, "slow", 0, 3)], hosts=2)
+    inner = GeometricDelayNetwork(0.3)
+    cn = ChaosNetwork(inner, sched)
+    got = cn.late_matrix(8, 10, 2)
+    np.testing.assert_array_equal(
+        got, np.maximum(inner.late_matrix(8, 10, 2),
+                        sched.late_matrix(8, 10)))
+    # tick pricing passes through: a fault changes WHO arrives, not what
+    # the healthy wire costs
+    assert cn.window_ticks(TAU) == inner.window_ticks(TAU)
+
+
+def test_chaos_network_validation():
+    sched = ChaosSchedule([])
+    with pytest.raises(ValueError, match="slow_factor"):
+        ChaosNetwork(InstantNetwork(), sched, slow_factor=0)
+
+
+# ---------------------------------------------------------------------------
+# QuorumMerge through the mesh executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(4)
+def test_quorum_merge_without_lateness_is_exactly_delta():
+    """With nobody late every delta lands, the quorum is met every window,
+    and the carry stays zero: quorum must reduce to the plain eq.-8 delta
+    merge BIT-EXACTLY (the default-path protection)."""
+    data, eval_data, w0 = _setup(4)
+    r_d = MeshExecutor(network=InstantNetwork()).run(
+        "delta", w0, data, eval_data, tau=TAU)
+    r_q = MeshExecutor(network=InstantNetwork(), merge="quorum").run(
+        "delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_array_equal(np.asarray(r_d.w_shared),
+                                  np.asarray(r_q.w_shared))
+    np.testing.assert_array_equal(np.asarray(r_d.distortion),
+                                  np.asarray(r_q.distortion))
+
+
+def test_quorum_merge_validation():
+    with pytest.raises(ValueError, match="merge"):
+        MeshExecutor(merge="bogus")
+    with pytest.raises(ValueError, match="quorum_frac"):
+        MeshExecutor(merge="quorum", quorum_frac=0.0)
+
+
+@pytest.mark.devices(4)
+def test_quorum_merge_rejects_non_delta_scheme():
+    data, eval_data, w0 = _setup(4, n=200)
+    ex = MeshExecutor(network=InstantNetwork(), merge="quorum")
+    with pytest.raises(ValueError, match="delta"):
+        ex.run("average", w0, data, eval_data, tau=TAU)
+
+
+@pytest.mark.devices(4)
+def test_quorum_merge_survives_injected_stragglers():
+    """Slow + partition faults on a static mesh: late deltas fold in via
+    the stale-window rule instead of stalling the barrier, and the run
+    still converges."""
+    sched = ChaosSchedule.generate(11, windows=40, m=4, slows=1,
+                                   partitions=1, hosts=2)
+    data, eval_data, w0 = _setup(4)
+    ex = MeshExecutor(network=ChaosNetwork(InstantNetwork(), sched),
+                      merge="quorum")
+    res = ex.run("delta", w0, data, eval_data, tau=TAU)
+    assert float(res.distortion[-1]) < float(res.distortion[0])
+
+
+# ---------------------------------------------------------------------------
+# chaos kills through the elastic executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(4)
+def test_elastic_chaos_kill_is_unscheduled_resize():
+    """Injected deaths become unscheduled shrink-by-one resizes at the
+    next window barrier, tagged cause='chaos_kill'."""
+    sched = ChaosSchedule([(10, "kill", 1), (15, "kill", 2)], hosts=2)
+    data, eval_data, w0 = _setup(4)
+    ex = ElasticMeshExecutor([], network=ChaosNetwork(InstantNetwork(),
+                                                      sched),
+                             chaos=sched, merge="quorum")
+    res = ex.run("delta", w0, data, eval_data, tau=TAU)
+    assert [(e.window, e.old_m, e.new_m, e.cause)
+            for e in ex.resize_events] == [(10, 4, 3, "chaos_kill"),
+                                           (15, 3, 2, "chaos_kill")]
+    assert float(res.distortion[-1]) < float(res.distortion[0])
+
+
+@pytest.mark.devices(4)
+def test_elastic_chaos_composes_with_scheduled_resizes():
+    sched = ChaosSchedule([(20, "kill", 0)], hosts=2)
+    data, eval_data, w0 = _setup(4)
+    ex = ElasticMeshExecutor([(10, 2)], network=ChaosNetwork(
+        InstantNetwork(), sched), chaos=sched, merge="quorum")
+    ex.run("delta", w0, data, eval_data, tau=TAU)
+    assert [(e.window, e.cause) for e in ex.resize_events] == [
+        (10, "schedule"), (20, "chaos_kill")]
+
+
+@pytest.mark.devices(4)
+def test_elastic_periodic_checkpoint_and_resume(tmp_path):
+    """checkpoint_every saves full state between resizes, so a preempted
+    run resumes mid-stream bit-identically — the serve-while-train
+    preemption-safety contract."""
+    data, eval_data, w0 = _setup(4)
+    ck = Checkpointer(str(tmp_path))
+    ex1 = ElasticMeshExecutor([], network=InstantNetwork(),
+                              checkpointer=ck, checkpoint_every=5)
+    r1 = ex1.run("delta", w0, data, eval_data, tau=TAU)
+    ck.wait()
+    last = ck.latest_step()
+    assert last > 0 and last % 5 == 0
+
+    ex2 = ElasticMeshExecutor([], network=InstantNetwork(),
+                              checkpointer=ck, checkpoint_every=5,
+                              resume=True)
+    r2 = ex2.run("delta", w0, data, eval_data, tau=TAU)
+    np.testing.assert_array_equal(np.asarray(r1.w_shared),
+                                  np.asarray(r2.w_shared))
+    # the resumed run replays only the windows after the last checkpoint
+    assert len(r2.distortion) < len(r1.distortion)
+    np.testing.assert_array_equal(
+        np.asarray(r1.distortion[-len(r2.distortion):]),
+        np.asarray(r2.distortion))
+
+
+def test_elastic_checkpoint_every_validation():
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        ElasticMeshExecutor([], checkpoint_every=0,
+                            checkpointer=object())
+    with pytest.raises(ValueError, match="checkpointer"):
+        ElasticMeshExecutor([], checkpoint_every=5)
+
+
+# ---------------------------------------------------------------------------
+# preemption-safe serving (stale publishes on resume)
+# ---------------------------------------------------------------------------
+
+def test_publisher_skip_stale_drops_replayed_windows():
+    store = CodebookStore()
+    w = np.zeros((4, 2), np.float32)
+    pub = store.publisher(skip_stale=True)
+    pub(5, w)
+    assert (store.version, store.latest().step) == (1, 5)
+    # a resumed trainer replaying the checkpointed prefix must NOT march
+    # the served codebook backward
+    pub(3, w)
+    pub(5, w)
+    assert store.version == 1
+    pub(6, w)
+    assert (store.version, store.latest().step) == (2, 6)
+    # default publisher keeps the old always-publish behaviour
+    store.publisher()(3, w)
+    assert store.version == 3
+
+
+# ---------------------------------------------------------------------------
+# obs: chaos spans in the trace checker
+# ---------------------------------------------------------------------------
+
+def _trace_meta():
+    return [
+        {"ph": "M", "name": "process_name", "pid": 1, "args": {"name": "p"}},
+        {"ph": "M", "name": "thread_name", "pid": 1, "tid": 1,
+         "args": {"name": "t"}},
+    ]
+
+
+def test_check_trace_expect_spans():
+    span = {"ph": "X", "name": "chaos_kill", "pid": 1, "tid": 1,
+            "ts": 0.0, "dur": 5.0, "args": {"window": 3}}
+    assert check_trace(_trace_meta() + [span],
+                       expect_spans=["chaos_kill"]) == []
+    errors = check_trace(_trace_meta() + [span],
+                         expect_spans=["chaos_slow"])
+    assert len(errors) == 1 and "chaos_slow" in errors[0]
+
+
+# ---------------------------------------------------------------------------
+# chaos regression gate (the CI satellite)
+# ---------------------------------------------------------------------------
+
+def _chaos_doc(ratio=1.05, final_c=0.05, wire=1000, events=None, **over):
+    rec = {
+        "kind": "chaos", "seed": 7, "m": 8, "n": 400, "d": 8, "kappa": 16,
+        "tau": 10, "hosts": 2, "quorum_frac": 0.6,
+        "events": events if events is not None else [
+            {"window": 10, "kind": "kill", "target": 3, "duration": 1}],
+        "final_C": final_c, "final_C_oracle": final_c / ratio,
+        "distortion_ratio": ratio, "merge_wire_bytes": wire,
+        "merge_logical_bytes": wire, "wall_s": 0.1, "recovery_wall_s": 0.0,
+        "resizes": [], "trace_ok": True, "trace_errors": [],
+    }
+    rec.update(over)
+    return {"suite": "chaos", "results": [rec]}
+
+
+def test_chaos_gate_passes_on_identical_runs():
+    ok, msgs = check_regression.check_chaos(_chaos_doc(), _chaos_doc())
+    assert ok, msgs
+
+
+def test_chaos_gate_fails_on_distortion_above_bound():
+    ok, msgs = check_regression.check_chaos(_chaos_doc(),
+                                            _chaos_doc(ratio=1.30))
+    assert not ok and any("distortion ratio" in m and m.startswith("FAIL")
+                          for m in msgs)
+
+
+def test_chaos_gate_fails_on_schedule_drift():
+    drifted = _chaos_doc(events=[
+        {"window": 11, "kind": "kill", "target": 3, "duration": 1}])
+    ok, msgs = check_regression.check_chaos(_chaos_doc(), drifted)
+    assert not ok and any("schedule drifted" in m for m in msgs)
+
+
+def test_chaos_gate_fails_on_wire_byte_drift():
+    ok, msgs = check_regression.check_chaos(_chaos_doc(),
+                                            _chaos_doc(wire=1001))
+    assert not ok and any("wire bytes drifted" in m for m in msgs)
+
+
+def test_chaos_gate_fails_on_trace_violation():
+    bad = _chaos_doc(trace_ok=False, trace_errors=["span unclosed"])
+    ok, msgs = check_regression.check_chaos(_chaos_doc(), bad)
+    assert not ok and any("trace violated" in m for m in msgs)
+
+
+def test_chaos_gate_rejects_config_mismatch():
+    with pytest.raises(ValueError, match="config mismatch"):
+        check_regression.check_chaos(_chaos_doc(), _chaos_doc(seed=8))
+
+
+def test_chaos_gate_absolute_mode_needs_no_baseline():
+    ok, msgs = check_regression.check_chaos(None, _chaos_doc())
+    assert ok
+    # absolute mode still enforces the distortion bound + trace invariants
+    ok, _ = check_regression.check_chaos(None, _chaos_doc(ratio=1.5))
+    assert not ok
+
+
+def test_chaos_gate_cli_exit_codes(tmp_path):
+    """0 = pass, 1 = regression, 2 = config mismatch, 3 = missing file —
+    the satellite bugfix: a missing baseline is a SETUP failure, not a
+    regression and not a pass."""
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(_chaos_doc()))
+    fresh.write_text(json.dumps(_chaos_doc()))
+    argv = ["--baseline", str(base), "--fresh", str(fresh)]
+    assert check_regression.main(argv) == 0
+
+    fresh.write_text(json.dumps(_chaos_doc(ratio=1.5)))
+    assert check_regression.main(argv) == 1
+
+    fresh.write_text(json.dumps(_chaos_doc(seed=9)))
+    assert check_regression.main(argv) == 2
+
+    assert check_regression.main(
+        ["--baseline", str(tmp_path / "MISSING.json"),
+         "--fresh", str(fresh)]) == 3
+    base.write_text("{truncated")
+    assert check_regression.main(argv) == 3
+
+    # --absolute gates the fresh file alone (the cron seed sweep)
+    fresh.write_text(json.dumps(_chaos_doc()))
+    assert check_regression.main(["--absolute", "--fresh", str(fresh)]) == 0
+    fresh.write_text(json.dumps(_chaos_doc(ratio=1.5)))
+    assert check_regression.main(["--absolute", "--fresh", str(fresh)]) == 1
+    fresh.write_text(json.dumps({"suite": "engine", "results": []}))
+    assert check_regression.main(["--absolute", "--fresh", str(fresh)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# launch CLI
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(4)
+def test_train_cli_chaos_run(tmp_path, capsys):
+    rc = train_cli.main([
+        "--mode", "vq", "--executor", "mesh", "--scheme", "delta",
+        "--workers", "4", "--points", "300",
+        "--chaos", "3:kill=1,slow=1", "--ckpt-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "chaos: seed=3" in out
+    assert "executor=elastic" in out  # kills imply elastic recovery
+
+
+def test_train_cli_chaos_rejects_bad_spec(capsys):
+    rc = train_cli.main(["--mode", "vq", "--executor", "mesh",
+                         "--chaos", "banana"])
+    assert rc == 2
+    assert "bad chaos spec" in capsys.readouterr().out
+
+
+def test_train_cli_chaos_requires_delta_scheme(capsys):
+    rc = train_cli.main(["--mode", "vq", "--executor", "mesh",
+                         "--scheme", "average", "--chaos", "3:kill=1"])
+    assert rc == 2
+    assert "delta" in capsys.readouterr().out

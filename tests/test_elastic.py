@@ -372,10 +372,11 @@ def test_regression_gate_cli(tmp_path):
     fp.write_text(json.dumps(base))
     assert check_regression.main(["--baseline", str(bp),
                                   "--fresh", str(fp)]) == 0
+    # missing/truncated files are exit 3 (setup failure), distinct from
+    # 1 = regression and 2 = config mismatch, so CI can route the blame
     assert check_regression.main(["--baseline", str(bp),
-                                  "--fresh", str(tmp_path / "nope.json")]) == 2
-    # truncated JSON (bench killed mid-write) is exit 2, not a traceback
+                                  "--fresh", str(tmp_path / "nope.json")]) == 3
     trunc = tmp_path / "trunc.json"
     trunc.write_text('{"suite": "engine", "resu')
     assert check_regression.main(["--baseline", str(bp),
-                                  "--fresh", str(trunc)]) == 2
+                                  "--fresh", str(trunc)]) == 3
