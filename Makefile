@@ -11,6 +11,11 @@
 #                        run -> BENCH_obs.json (the <=1.03x obs gate input)
 #   make bench-chaos   — seeded fault-injection run (kills + straggler +
 #                        partition) vs the fault-free oracle -> BENCH_chaos.json
+#   make bench-profile — roofline-attributed profiling: per-window cost
+#                        attribution of the three schemes on the 8-device
+#                        mesh -> BENCH_profile.json (the check_profile input)
+#   make perf-report   — render every committed BENCH_*.json baseline plus
+#                        attribution into a self-contained perf_report.html
 #   make serve-smoke   — quantization service end to end: live elastic trainer
 #                        hot-swapping codebooks under open-loop load
 #   make trace-smoke   — 2-host traced + metered train run, then the trace
@@ -29,8 +34,9 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
 
 .PHONY: test lint bench-smoke bench-engine bench-elastic bench-serve \
-        bench-comm bench-hier bench-obs bench-chaos serve-smoke \
-        trace-smoke ci-local example-mesh example-elastic example-serve
+        bench-comm bench-hier bench-obs bench-chaos bench-profile \
+        perf-report serve-smoke trace-smoke ci-local example-mesh \
+        example-elastic example-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -66,6 +72,12 @@ bench-obs:
 
 bench-chaos:
 	$(PY) -m benchmarks.run --suite chaos --quick
+
+bench-profile:
+	$(PY) -m benchmarks.run --suite profile --quick
+
+perf-report:
+	$(PY) -m repro.obs.report --out perf_report.html
 
 serve-smoke:
 	$(PY) -m repro.launch.serve --mode vq --smoke --train-publish
@@ -104,6 +116,10 @@ ci-local: lint
 	$(PY) -m benchmarks.run --suite chaos --quick --out BENCH_chaos.fresh.json
 	$(PY) -m benchmarks.check_regression \
 		--baseline BENCH_chaos.json --fresh BENCH_chaos.fresh.json
+	$(PY) -m benchmarks.run --suite profile --quick --out BENCH_profile.fresh.json
+	$(PY) -m benchmarks.check_regression \
+		--baseline BENCH_profile.json --fresh BENCH_profile.fresh.json
+	$(PY) -m repro.obs.report --out perf_report.html
 	$(MAKE) trace-smoke
 	$(PY) -m benchmarks.run --suite elastic --quick --out BENCH_elastic.fresh.json
 

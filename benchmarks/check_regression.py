@@ -90,6 +90,33 @@ committed ``BENCH_chaos.json`` and FAILS when:
   (distortion bound + trace invariants) with no baseline file — the
   cron seed sweep runs seeds that have no committed baseline.
 
+**profile**: diffs a fresh ``--suite profile --quick`` output against the
+committed ``BENCH_profile.json`` and FAILS when:
+
+  * any scheme's roofline attribution terms (compute + memory +
+    collective + host residual) no longer sum to the measured per-window
+    wall within ``--max-consistency`` (default 0.15 — since the host
+    residual is clamped at zero, a violation means the ANALYTIC terms
+    overshoot the measurement: wrong flop/byte counts or a mis-inferred
+    while-loop trip count);
+  * the compute-term roofline efficiency drops below
+    ``--min-compute-eff`` (attribution lost the analytic compute term);
+  * the trip-count-corrected HLO collective bytes per window drift from
+    the baseline (machine-independent shape arithmetic, pinned exactly);
+  * the HLO bytes disagree with the transport's own CommLog logical-byte
+    accounting of the same program (two independent derivations of the
+    same traffic must agree).
+
+  On any profile failure the per-term attribution deltas vs the baseline
+  are printed; when any OTHER suite's gate fails and a
+  ``BENCH_profile.fresh.json`` sits beside the fresh file, the same
+  deltas are printed as a diagnostic — the gate says which roofline term
+  the regression lives in, not just that wall moved.
+
+Every run (pass or fail) ends with a gate table listing each gate's
+measured value, its bar, and its margin — so CI logs always show how
+close every suite sits to its thresholds, not only when one trips.
+
 All suites additionally WARN (never fail) when the baseline's recorded
 per-iteration ``wall_samples`` spread exceeds the regression threshold:
 a ratio FAIL against such a baseline is as likely noise as regression,
@@ -112,9 +139,43 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 import numpy as np
+
+
+def _gate(gates: list | None, name: str, value: float, bar: float,
+          cmp: str = "<=") -> None:
+    """Record one gate's (value, bar) pair for the always-printed summary
+    table — the margin to every bar should be visible in CI logs on green
+    runs too, not only when something trips."""
+    if gates is not None:
+        gates.append({"name": name, "value": float(value), "bar": float(bar),
+                      "cmp": cmp})
+
+
+def _gate_ok(g: dict) -> bool:
+    if g["cmp"] == "<=":
+        return g["value"] <= g["bar"]
+    if g["cmp"] == ">=":
+        return g["value"] >= g["bar"]
+    return g["value"] == g["bar"]
+
+
+def gate_table(gates: list[dict]) -> str:
+    """Aligned gate | value | bar | status summary."""
+    if not gates:
+        return ""
+    name_w = max(len(g["name"]) for g in gates)
+    lines = [f"{'gate':<{name_w}}  {'value':>12}  {'bar':>12}  status",
+             "-" * (name_w + 38)]
+    for g in gates:
+        lines.append(
+            f"{g['name']:<{name_w}}  {g['value']:>12.6g}  "
+            f"{g['cmp']:>2} {g['bar']:>9.6g}  "
+            f"{'ok' if _gate_ok(g) else 'FAIL'}")
+    return "\n".join(lines)
 
 
 def _index(doc: dict) -> dict[tuple[str, int], dict]:
@@ -126,7 +187,8 @@ def _config_key(rec: dict) -> tuple:
 
 
 def check(baseline: dict, fresh: dict, *, max_ratio_regression: float = 1.25,
-          curve_rtol: float = 1e-2) -> tuple[bool, list[str]]:
+          curve_rtol: float = 1e-2,
+          gates: list | None = None) -> tuple[bool, list[str]]:
     """Returns (ok, messages).  Raises ValueError on config mismatch."""
     base_idx, fresh_idx = _index(baseline), _index(fresh)
     common = sorted(set(base_idx) & set(fresh_idx))
@@ -150,6 +212,8 @@ def check(baseline: dict, fresh: dict, *, max_ratio_regression: float = 1.25,
                 / max(idx[("sim", m)]["wall_s"], 1e-12) for m in ms])
         r_base, r_fresh = ratios(base_idx), ratios(fresh_idx)
         regress = float(np.min(r_fresh / r_base))
+        _gate(gates, "engine mesh/sim min wall regression", regress,
+              max_ratio_regression)
         line = (f"mesh/sim wall ratio over M={ms}: baseline median "
                 f"{float(np.median(r_base)):.2f}x, fresh "
                 f"{float(np.median(r_fresh)):.2f}x "
@@ -161,6 +225,7 @@ def check(baseline: dict, fresh: dict, *, max_ratio_regression: float = 1.25,
             msgs.append(f"ok   {line}")
 
     # -- distortion curves: numerical fingerprint of the engine
+    max_err = 0.0
     for key in common:
         b, f = base_idx[key], fresh_idx[key]
         if _config_key(b) != _config_key(f):
@@ -176,12 +241,14 @@ def check(baseline: dict, fresh: dict, *, max_ratio_regression: float = 1.25,
                 f"{key}: curve length {cf.shape} != baseline {cb.shape} "
                 f"— config mismatch")
         err = float(np.max(np.abs(cf - cb) / (np.abs(cb) + 1e-12)))
+        max_err = max(max_err, err)
         if err > curve_rtol:
             ok = False
             msgs.append(f"FAIL {key}: distortion curve diverged "
                         f"(max rel err {err:.2e} > {curve_rtol:.0e})")
         else:
             msgs.append(f"ok   {key}: curve max rel err {err:.2e}")
+    _gate(gates, "engine distortion curve max rel err", max_err, curve_rtol)
     return ok, msgs
 
 
@@ -192,7 +259,8 @@ def _serve_rec(doc: dict, kind: str) -> dict | None:
 
 def check_serve(baseline: dict, fresh: dict, *,
                 max_ratio_regression: float = 1.25,
-                min_speedup: float = 4.0) -> tuple[bool, list[str]]:
+                min_speedup: float = 4.0,
+                gates: list | None = None) -> tuple[bool, list[str]]:
     """Serve-suite gate; same contract as ``check``."""
     msgs: list[str] = []
     ok = True
@@ -210,6 +278,8 @@ def check_serve(baseline: dict, fresh: dict, *,
     # the speedup is unbatched-vs-batched on ONE box, so (like the engine's
     # mesh/sim wall ratio) the machine divides out of the comparison
     regress = b_sp["speedup"] / max(f_sp["speedup"], 1e-12)
+    _gate(gates, "serve speedup regression", regress, max_ratio_regression)
+    _gate(gates, "serve batched speedup", f_sp["speedup"], min_speedup, ">=")
     line = (f"micro-batch speedup: baseline {b_sp['speedup']:.1f}x, "
             f"fresh {f_sp['speedup']:.1f}x (regression {regress:.2f}x)")
     if regress > max_ratio_regression:
@@ -223,6 +293,8 @@ def check_serve(baseline: dict, fresh: dict, *,
         msgs.append(f"ok   {line}")
 
     hot = _serve_rec(fresh, "hotswap")
+    _gate(gates, "serve hot-swap failed requests",
+          hot.get("failed", 1) if hot else 1, 0)
     if hot is None:
         ok = False
         msgs.append("FAIL fresh serve run has no hotswap record")
@@ -246,7 +318,8 @@ def _comm_cells(doc: dict) -> dict[tuple[str, str], dict]:
 def check_comm(baseline: dict, fresh: dict, *,
                max_ratio_regression: float = 1.25,
                min_sparse_reduction: float = 4.0,
-               curve_rtol: float = 1e-2) -> tuple[bool, list[str]]:
+               curve_rtol: float = 1e-2,
+               gates: list | None = None) -> tuple[bool, list[str]]:
     """Comm-suite gate; same contract as ``check``.
 
     Wire bytes are trace-exact shape arithmetic, so they must match the
@@ -271,6 +344,8 @@ def check_comm(baseline: dict, fresh: dict, *,
         raise ValueError("no (scheme, transport) cells shared between "
                          "baseline and fresh comm output — regenerate with "
                          "benchmarks.run --suite comm")
+    drifted = 0
+    max_err = 0.0
     for key in common:
         b, f = b_cells[key], f_cells[key]
         cfg = ("m", "n", "d", "kappa", "tau", "sparse_frac")
@@ -281,6 +356,7 @@ def check_comm(baseline: dict, fresh: dict, *,
                 f"comparing different runs")
         if b["merge_wire_bytes"] != f["merge_wire_bytes"]:
             ok = False
+            drifted += 1
             msgs.append(
                 f"FAIL {key}: measured merge wire bytes drifted "
                 f"{b['merge_wire_bytes']} -> {f['merge_wire_bytes']} "
@@ -289,29 +365,35 @@ def check_comm(baseline: dict, fresh: dict, *,
             msgs.append(f"ok   {key}: merge wire "
                         f"{f['merge_wire_bytes']} B (exact)")
         err = abs(f["final_C"] - b["final_C"]) / (abs(b["final_C"]) + 1e-12)
+        max_err = max(max_err, err)
         if err > curve_rtol:
             ok = False
             msgs.append(f"FAIL {key}: final distortion diverged "
                         f"(rel err {err:.2e} > {curve_rtol:.0e})")
+    _gate(gates, "comm wire-byte cells drifted", drifted, 0)
+    _gate(gates, "comm final distortion max rel err", max_err, curve_rtol)
 
     red_ok, red_msgs = _check_reduction_record(
         baseline, fresh, kind="sparse_reduction", suite="comm",
-        label="sparse-vs-dense wire reduction", floor=min_sparse_reduction)
+        label="sparse-vs-dense wire reduction", floor=min_sparse_reduction,
+        gates=gates)
     par_ok, par_msgs = _check_parity_record(
         baseline, fresh, kind="ring_parity", label="ring/xla wall parity",
-        max_ratio_regression=max_ratio_regression)
+        max_ratio_regression=max_ratio_regression, gates=gates)
     return ok and red_ok and par_ok, msgs + red_msgs + par_msgs
 
 
 def _check_reduction_record(baseline: dict, fresh: dict, *, kind: str,
-                            suite: str, label: str,
-                            floor: float) -> tuple[bool, list[str]]:
+                            suite: str, label: str, floor: float,
+                            gates: list | None = None
+                            ) -> tuple[bool, list[str]]:
     """Shared floor gate on a wire-reduction record (comm + hier suites)."""
     b_red = _serve_rec(baseline, kind)
     f_red = _serve_rec(fresh, kind)
     if f_red is None or b_red is None:
         return False, [f"FAIL {suite} suite needs a {kind!r} record in "
                        f"both baseline and fresh output"]
+    _gate(gates, label, f_red["reduction"], floor, ">=")
     if f_red["reduction"] < floor:
         return False, [f"FAIL {label} {f_red['reduction']:.2f}x below the "
                        f"{floor:.0f}x bar"]
@@ -320,7 +402,8 @@ def _check_reduction_record(baseline: dict, fresh: dict, *, kind: str,
 
 
 def _check_parity_record(baseline: dict, fresh: dict, *, kind: str,
-                         label: str, max_ratio_regression: float
+                         label: str, max_ratio_regression: float,
+                         gates: list | None = None
                          ) -> tuple[bool, list[str]]:
     """Shared wall-parity gate: MIN regression over the scheme legs (the
     engine gate's flap-proof statistic — noise on an oversubscribed host
@@ -336,6 +419,7 @@ def _check_parity_record(baseline: dict, fresh: dict, *, kind: str,
                          f"regenerate the baseline")
     regress = min(f_par["parity"][s] / max(b_par["parity"][s], 1e-12)
                   for s in schemes)
+    _gate(gates, f"{label} min regression", regress, max_ratio_regression)
     med_b = float(np.median([b_par["parity"][s] for s in schemes]))
     med_f = float(np.median([f_par["parity"][s] for s in schemes]))
     line = (f"{label} over {schemes}: baseline median {med_b:.2f}x, "
@@ -353,7 +437,8 @@ def _hier_cells(doc: dict) -> dict[tuple[str, str], dict]:
 def check_hier(baseline: dict, fresh: dict, *,
                max_ratio_regression: float = 1.25,
                min_sparse_reduction: float = 4.0,
-               curve_rtol: float = 1e-2) -> tuple[bool, list[str]]:
+               curve_rtol: float = 1e-2,
+               gates: list | None = None) -> tuple[bool, list[str]]:
     """Hier-suite gate; same contract as ``check``.
 
     Per-tier wire bytes are trace-exact shape arithmetic, so they must
@@ -374,6 +459,8 @@ def check_hier(baseline: dict, fresh: dict, *,
         raise ValueError("no (scheme, variant) cells shared between "
                          "baseline and fresh hier output — regenerate with "
                          "benchmarks.run --suite hier")
+    drifted = 0
+    max_err = 0.0
     for key in common:
         b, f = b_cells[key], f_cells[key]
         cfg = ("m", "hosts", "workers_per_host", "n", "d", "kappa", "tau",
@@ -391,6 +478,7 @@ def check_hier(baseline: dict, fresh: dict, *,
                  if b.get(t, 0) != f.get(t, 0)]
         if drift:
             ok = False
+            drifted += len(drift)
             for t, bb, ff in drift:
                 msgs.append(
                     f"FAIL {key}: measured {t} drifted {bb} -> {ff} "
@@ -405,23 +493,26 @@ def check_hier(baseline: dict, fresh: dict, *,
             msgs.append(f"FAIL {key}: dense tier-1 run no longer "
                         f"bit-matches the flat mesh oracle")
         err = abs(f["final_C"] - b["final_C"]) / (abs(b["final_C"]) + 1e-12)
+        max_err = max(max_err, err)
         if err > curve_rtol:
             ok = False
             msgs.append(f"FAIL {key}: final distortion diverged "
                         f"(rel err {err:.2e} > {curve_rtol:.0e})")
+    _gate(gates, "hier wire-byte fields drifted", drifted, 0)
+    _gate(gates, "hier final distortion max rel err", max_err, curve_rtol)
 
     red_ok, red_msgs = _check_reduction_record(
         baseline, fresh, kind="inter_reduction", suite="hier",
         label="inter-host sparse-vs-dense tier-1 wire reduction",
-        floor=min_sparse_reduction)
+        floor=min_sparse_reduction, gates=gates)
     par_ok, par_msgs = _check_parity_record(
         baseline, fresh, kind="hier_parity", label="hier/flat wall parity",
-        max_ratio_regression=max_ratio_regression)
+        max_ratio_regression=max_ratio_regression, gates=gates)
     return ok and red_ok and par_ok, msgs + red_msgs + par_msgs
 
 
-def check_obs(baseline: dict, fresh: dict, *,
-              max_overhead: float = 1.03) -> tuple[bool, list[str]]:
+def check_obs(baseline: dict, fresh: dict, *, max_overhead: float = 1.03,
+              gates: list | None = None) -> tuple[bool, list[str]]:
     """Obs-suite gate; same contract as ``check``.
 
     The overhead bar is ABSOLUTE (the acceptance criterion: live
@@ -455,6 +546,7 @@ def check_obs(baseline: dict, fresh: dict, *,
                     f"obs overhead [{scheme}]: baseline config != fresh — "
                     f"regenerate the baseline (benchmarks.run --suite obs) "
                     f"instead of comparing different runs")
+        _gate(gates, f"obs overhead [{scheme}]", f["overhead"], max_overhead)
         line = (f"obs overhead [{scheme}]: instrumented/bare wall "
                 f"{f['overhead']:.3f}x (bar <= {max_overhead:.2f}x)")
         if f["overhead"] > max_overhead:
@@ -464,6 +556,8 @@ def check_obs(baseline: dict, fresh: dict, *,
             msgs.append(f"ok   {line}")
 
     tr = _serve_rec(fresh, "trace")
+    _gate(gates, "obs trace invariants ok",
+          1 if (tr and tr.get("trace_ok", False)) else 0, 1, ">=")
     if tr is None:
         ok = False
         msgs.append("FAIL fresh obs run has no 'trace' record")
@@ -481,7 +575,8 @@ def check_obs(baseline: dict, fresh: dict, *,
 
 def check_chaos(baseline: dict | None, fresh: dict, *,
                 max_chaos_distortion: float = 1.25,
-                curve_rtol: float = 1e-2) -> tuple[bool, list[str]]:
+                curve_rtol: float = 1e-2,
+                gates: list | None = None) -> tuple[bool, list[str]]:
     """Chaos-suite gate; same contract as ``check``.
 
     ``baseline=None`` is the ``--absolute`` mode used by the cron seed
@@ -539,6 +634,10 @@ def check_chaos(baseline: dict | None, fresh: dict, *,
         else:
             msgs.append(f"ok   chaos final distortion rel err {err:.2e}")
 
+    _gate(gates, "chaos distortion ratio vs oracle", f["distortion_ratio"],
+          max_chaos_distortion)
+    _gate(gates, "chaos trace invariants ok",
+          1 if f.get("trace_ok", False) else 0, 1, ">=")
     line = (f"distortion ratio vs fault-free oracle "
             f"{f['distortion_ratio']:.4f} "
             f"(bound {max_chaos_distortion:.2f}, "
@@ -556,6 +655,136 @@ def check_chaos(baseline: dict | None, fresh: dict, *,
     else:
         msgs.append("ok   chaos trace: chaos_* spans present, "
                     "invariants hold")
+    return ok, msgs
+
+
+def attribution_deltas(baseline: dict, fresh: dict) -> list[str]:
+    """Per-scheme roofline-term movement between two profile docs.
+
+    This is what turns a wall regression from "slower" into "slower
+    BECAUSE": printed on every profile-gate run and, by ``main``, as a
+    diagnostic whenever ANY suite's gate fails and a fresh profile doc is
+    available next to the committed one."""
+    b_idx = {r["scheme"]: r for r in baseline.get("results", [])
+             if r.get("kind") == "attribution"}
+    f_idx = {r["scheme"]: r for r in fresh.get("results", [])
+             if r.get("kind") == "attribution"}
+    out: list[str] = []
+    for scheme in sorted(set(b_idx) & set(f_idx)):
+        ba, fa = b_idx[scheme]["attribution"], f_idx[scheme]["attribution"]
+        moved = []
+        for term in ("compute", "memory", "collective", "host"):
+            bt, ft = ba.get(f"t_{term}_s", 0.0), fa.get(f"t_{term}_s", 0.0)
+            if bt > 0:
+                moved.append(f"{term} {bt * 1e6:.2f}->{ft * 1e6:.2f}us "
+                             f"({ft / bt:.2f}x)")
+            elif ft > 0:
+                moved.append(f"{term} 0->{ft * 1e6:.2f}us (new)")
+        wall = (f"window wall {ba['window_wall_s'] * 1e6:.1f}->"
+                f"{fa['window_wall_s'] * 1e6:.1f}us")
+        out.append(f"attribution [{scheme}]: {wall}; " + ", ".join(moved))
+    return out
+
+
+def check_profile(baseline: dict, fresh: dict, *,
+                  max_consistency: float = 0.15,
+                  min_compute_eff: float = 1e-9,
+                  gates: list | None = None) -> tuple[bool, list[str]]:
+    """Profile-suite gate; same contract as ``check``.
+
+    * attribution-sum consistency: the roofline terms (host residual
+      included) must sum to the measured window wall within
+      ``max_consistency`` (0.15 — the acceptance criterion).  The
+      residual is clamped at zero, so a violation means the ANALYTIC
+      terms overshoot measured wall: a wrong flop/byte count or a
+      mis-inferred while-loop trip count;
+    * compute-term efficiency floor: the analytic compute term must be
+      present and positive (TPU-peak-relative, so tiny on the CPU
+      harness — the floor pins attribution happened, not CPU speed);
+    * ``collective_bytes_per_window`` is trip-count-corrected HLO shape
+      arithmetic — machine-independent, pinned EXACTLY against the
+      baseline, and cross-checked against the transport's own CommLog
+      logical-byte accounting of the same program.
+
+    On any failure the per-term attribution deltas vs the baseline are
+    appended, so the log says WHICH roofline term moved, not just that
+    wall did.
+    """
+    msgs: list[str] = []
+    ok = True
+    b_idx = {r["scheme"]: r for r in baseline.get("results", [])
+             if r.get("kind") == "attribution"}
+    f_idx = {r["scheme"]: r for r in fresh.get("results", [])
+             if r.get("kind") == "attribution"}
+    if not b_idx or not f_idx:
+        raise ValueError("profile suite needs 'attribution' records in both "
+                         "baseline and fresh output — regenerate with "
+                         "benchmarks.run --suite profile")
+    missing = sorted(set(b_idx) - set(f_idx))
+    if missing:
+        raise ValueError(f"fresh profile run is missing baseline schemes "
+                         f"{missing} — the suite lost coverage")
+    worst_cons = 0.0
+    min_eff = float("inf")
+    for scheme in sorted(f_idx):
+        f = f_idx[scheme]
+        b = b_idx.get(scheme)
+        fa = f["attribution"]
+        if b is not None:
+            cfg = ("m", "n", "d", "kappa", "tau", "transport")
+            if tuple(b.get(k) for k in cfg) != tuple(f.get(k) for k in cfg):
+                raise ValueError(
+                    f"profile [{scheme}]: baseline config != fresh — "
+                    f"regenerate the baseline (benchmarks.run --suite "
+                    f"profile) instead of comparing different runs")
+        cons = fa["consistency"]
+        worst_cons = max(worst_cons, cons)
+        line = (f"profile [{scheme}]: attribution sum vs measured window "
+                f"wall off by {cons:.4f} (bar <= {max_consistency:.2f})")
+        if cons > max_consistency:
+            ok = False
+            msgs.append(f"FAIL {line} — modeled terms overshoot measured "
+                        f"wall (bad analytic count or trip count)")
+        else:
+            msgs.append(f"ok   {line}")
+        eff = fa["efficiency"].get("compute", 0.0)
+        min_eff = min(min_eff, eff)
+        if eff < min_compute_eff:
+            ok = False
+            msgs.append(f"FAIL profile [{scheme}]: compute-term efficiency "
+                        f"{eff:.3e} below the {min_compute_eff:.0e} floor "
+                        f"(attribution lost the analytic compute term)")
+        if b is not None:
+            bw = b["attribution"]["collective_bytes_per_window"]
+            fw = fa["collective_bytes_per_window"]
+            if bw != fw:
+                ok = False
+                msgs.append(
+                    f"FAIL profile [{scheme}]: HLO collective bytes/window "
+                    f"drifted {bw} -> {fw} (collective structure or trip-"
+                    f"count inference changed)")
+            else:
+                msgs.append(f"ok   profile [{scheme}]: collective "
+                            f"{fw:.0f} B/window (HLO, exact)")
+        log_pw = f.get("commlog_logical_bytes_per_window")
+        if log_pw:
+            rel = abs(fa["collective_bytes_per_window"] - log_pw) / log_pw
+            if rel > 1e-6:
+                ok = False
+                msgs.append(
+                    f"FAIL profile [{scheme}]: HLO bytes/window "
+                    f"{fa['collective_bytes_per_window']:.1f} != CommLog "
+                    f"{log_pw:.1f} (rel {rel:.2e}) — the parsed program "
+                    f"disagrees with the transport's own accounting")
+            else:
+                msgs.append(f"ok   profile [{scheme}]: HLO == CommLog "
+                            f"logical bytes ({log_pw:.1f} B/window)")
+    _gate(gates, "profile attribution consistency (worst)", worst_cons,
+          max_consistency)
+    _gate(gates, "profile compute efficiency (min)", min_eff,
+          min_compute_eff, ">=")
+    if not ok:
+        msgs += attribution_deltas(baseline, fresh)
     return ok, msgs
 
 
@@ -613,6 +842,15 @@ def main(argv=None) -> int:
                     help="chaos suite: absolute ceiling for the faulted "
                          "run's final distortion over the fault-free "
                          "oracle (1.25 = within 25%%)")
+    ap.add_argument("--max-consistency", type=float, default=0.15,
+                    help="profile suite: ceiling for |attributed - "
+                         "measured| / measured on the per-window wall "
+                         "(0.15 = the 15%% acceptance bar)")
+    ap.add_argument("--min-compute-eff", type=float, default=1e-9,
+                    help="profile suite: floor for the compute-term "
+                         "roofline efficiency (TPU-peak-relative, so "
+                         "tiny on the CPU CI harness; the floor proves "
+                         "attribution ran, it does not rate hardware)")
     ap.add_argument("--absolute", action="store_true",
                     help="chaos suite: gate the fresh output on the "
                          "absolute bars alone, no baseline file (the "
@@ -647,36 +885,43 @@ def main(argv=None) -> int:
             print(f"error: baseline suite {suites[0]!r} != fresh "
                   f"{suites[1]!r}", file=sys.stderr)
             return 2
+    gates: list[dict] = []
     try:
         if suites[0] == "serve":
             ok, msgs = check_serve(
                 baseline, fresh,
                 max_ratio_regression=args.max_ratio_regression,
-                min_speedup=args.min_speedup)
+                min_speedup=args.min_speedup, gates=gates)
         elif suites[0] == "comm":
             ok, msgs = check_comm(
                 baseline, fresh,
                 max_ratio_regression=args.max_ratio_regression,
                 min_sparse_reduction=args.min_sparse_reduction,
-                curve_rtol=args.curve_rtol)
+                curve_rtol=args.curve_rtol, gates=gates)
         elif suites[0] == "hier":
             ok, msgs = check_hier(
                 baseline, fresh,
                 max_ratio_regression=args.max_ratio_regression,
                 min_sparse_reduction=args.min_sparse_reduction,
-                curve_rtol=args.curve_rtol)
+                curve_rtol=args.curve_rtol, gates=gates)
         elif suites[0] == "obs":
             ok, msgs = check_obs(baseline, fresh,
-                                 max_overhead=args.max_obs_overhead)
+                                 max_overhead=args.max_obs_overhead,
+                                 gates=gates)
         elif suites[0] == "chaos":
             ok, msgs = check_chaos(
                 baseline, fresh,
                 max_chaos_distortion=args.max_chaos_distortion,
-                curve_rtol=args.curve_rtol)
+                curve_rtol=args.curve_rtol, gates=gates)
+        elif suites[0] == "profile":
+            ok, msgs = check_profile(
+                baseline, fresh,
+                max_consistency=args.max_consistency,
+                min_compute_eff=args.min_compute_eff, gates=gates)
         else:
             ok, msgs = check(baseline, fresh,
                              max_ratio_regression=args.max_ratio_regression,
-                             curve_rtol=args.curve_rtol)
+                             curve_rtol=args.curve_rtol, gates=gates)
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -684,10 +929,39 @@ def main(argv=None) -> int:
               else args.max_ratio_regression - 1.0)
     if baseline is not None:
         msgs += variance_warnings(baseline, threshold=thresh)
+    if not ok and suites[0] != "profile":
+        # any suite's wall gate failing: attribute the regression if a
+        # fresh profile run sits next to the committed baseline — say
+        # WHICH roofline term moved, not just that wall did
+        msgs += _profile_attribution_diag(args.fresh)
     for m in msgs:
         print(m)
+    if gates:
+        print()
+        print(gate_table(gates))
     print("benchmark regression gate:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
+
+
+def _profile_attribution_diag(fresh_path: str) -> list[str]:
+    """Best-effort roofline attribution of a non-profile gate failure.
+
+    Looks for ``BENCH_profile.json`` (committed) and
+    ``BENCH_profile.fresh.json`` beside the failing suite's fresh file;
+    silent if either is absent — this is a diagnostic, never a gate."""
+    d = os.path.dirname(os.path.abspath(fresh_path))
+    try:
+        with open(os.path.join(d, "BENCH_profile.json")) as fh:
+            base = json.load(fh)
+        with open(os.path.join(d, "BENCH_profile.fresh.json")) as fh:
+            fresh = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        return []
+    deltas = attribution_deltas(base, fresh)
+    if deltas:
+        deltas.insert(0, "roofline attribution of the regression "
+                         "(BENCH_profile.fresh.json vs committed):")
+    return deltas
 
 
 if __name__ == "__main__":

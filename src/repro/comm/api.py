@@ -186,6 +186,17 @@ class CommLog:
         self._dropped += len(self.records)
         self.records.clear()
 
+    def logical_bytes_by_tag(self, records=None) -> dict[str, int]:
+        """Total logical payload (``logical_bytes * calls``) per tag.
+
+        The profiler's ground truth: a program's HLO all-reduce bytes must
+        equal the ``merge``-tag logical bytes the transport recorded for
+        that same program (tested in ``tests/test_profile.py``)."""
+        out: dict[str, int] = {}
+        for r in (self.records if records is None else records):
+            out[r.tag] = out.get(r.tag, 0) + r.logical_bytes * r.calls
+        return out
+
     @staticmethod
     def summarize(records) -> dict:
         """Totals (``wire/logical bytes * calls``) overall and per tag.

@@ -21,10 +21,13 @@ from dataclasses import dataclass, field
 
 _BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
           "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8, "u64": 8,
-          "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+          "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16}
 
-_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|"
-                       r"pred|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+# NB: multi-char prefixes before their prefix (f8e4m3fn before f16's f1?
+# no overlap, but c128 must precede c64-style matches and s16 before s1...)
+# — the alternation is ordered longest-first within each family.
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s16|s32|s64|s8|u16|u32|u64|u8|"
+                       r"pred|f8e4m3fn|f8e5m2|c128|c64)\[([\d,]*)\]")
 _COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
@@ -41,8 +44,19 @@ def _shape_bytes(type_str: str) -> int:
 
 
 def _leading_dims(type_str: str) -> list[int]:
+    """Leading dims of the non-predicate tuple elements.
+
+    The VQ async loop's masked all-reduce threads ``pred[M]`` activity
+    masks through the while carry; counting those vectors in the
+    leading-dim mode lets the worker count M outvote the true trip count
+    (the stacked xs/ys leading dim), so predicate shapes are excluded
+    from trip inference.  (They still count toward ``_shape_bytes`` —
+    the exclusion is only for the trip-count heuristic.)
+    """
     out = []
-    for _, dims in _SHAPE_RE.findall(type_str):
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt == "pred":
+            continue
         parts = [p for p in dims.split(",") if p]
         if parts:
             out.append(int(parts[0]))

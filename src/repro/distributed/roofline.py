@@ -213,6 +213,94 @@ def uses_fsdp_name(cfg: ModelConfig) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# VQ cells — the paper's inner loop, per worker (= per device on the mesh)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VqCell:
+    """Shapes of one VQ *window* on ONE device (= one paper worker).
+
+    The engine runs a window as a fused ``lax.scan`` of ``tau`` stochastic
+    VQ steps (assign -> delta -> update, the eq. 3/8 inner loop), then an
+    eval-set distortion probe and the cross-worker merge.  The analytic
+    flop/byte terms below are the hand counts for those phases, specialized
+    to the ``(d, kappa, tau, bm)`` shapes the Pallas path tiles over —
+    deliberately the same arithmetic style as ``benchmarks/run.py``'s
+    ``bench_vq_kernel`` so the numbers cross-check.
+    """
+
+    d: int                 # point dimensionality
+    kappa: int             # codebook size
+    tau: int               # steps per window (merge period)
+    n_eval: int = 0        # eval points scored per window (0 = no probe)
+    bm: int = 128          # Pallas block rows (HBM tiling granularity)
+    dtype_bytes: int = 4   # codebook/point element width (f32)
+
+    def step_flops(self) -> float:
+        """One stochastic VQ step: distances ``2*kappa*d`` (|z-w|^2 via the
+        expanded dot), argmin ``kappa``, one-hot delta scatter ``2*kappa*d``,
+        and the eq.-8 update (scale + add + displacement) ``3*kappa*d``."""
+        k, d = self.kappa, self.d
+        return 2 * k * d + k + 2 * k * d + 3 * k * d
+
+    def eval_flops(self) -> float:
+        """Distortion probe: full distance matrix + min-reduce over codes."""
+        return 2 * self.n_eval * self.kappa * self.d + 2 * self.n_eval * self.kappa
+
+    def merge_flops(self) -> float:
+        """Post-collective combine: scale + add over the codebook."""
+        return 3 * self.kappa * self.d
+
+    def window_flops(self) -> float:
+        """Device FLOPs for one full window (tau steps + probe + merge)."""
+        return self.tau * self.step_flops() + self.eval_flops() + self.merge_flops()
+
+    def window_hbm_bytes(self) -> float:
+        """Dominant per-window HBM traffic: each step re-reads the codebook
+        (twice: assign + update) and streams its point; the probe streams the
+        eval shard; the merge reads + writes the codebook once."""
+        b = self.dtype_bytes
+        k, d = self.kappa, self.d
+        per_step = 2 * k * d * b + d * b + k * b     # codebook x2, point, codes
+        probe = self.n_eval * d * b
+        merge = 2 * k * d * b
+        return self.tau * per_step + probe + merge
+
+    def merge_collective_bytes(self) -> float:
+        """Logical all-reduce payload of one dense merge: the codebook."""
+        return self.kappa * self.d * self.dtype_bytes
+
+
+def vq_roofline_terms(cell: VqCell,
+                      collective_bytes_per_window: float | None = None) -> dict:
+    """Per-window roofline terms (seconds) for one VQ worker-device.
+
+    ``collective_bytes_per_window`` should come from the trip-count-
+    corrected HLO parse of the *actual* compiled program
+    (``hlo_analysis.analyze_collectives``); the analytic
+    ``merge_collective_bytes`` is only the dense-merge lower bound used
+    when no compiled program is available.
+    """
+    coll = (cell.merge_collective_bytes()
+            if collective_bytes_per_window is None
+            else collective_bytes_per_window)
+    terms = {
+        "compute": cell.window_flops() / PEAK_FLOPS,
+        "memory": cell.window_hbm_bytes() / HBM_BW,
+        "collective": coll / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "dominant": dominant,
+        "window_flops": cell.window_flops(),
+        "window_hbm_bytes": cell.window_hbm_bytes(),
+        "collective_bytes": coll,
+        "window_time_bound_s": max(terms.values()),   # perfect-overlap bound
+    }
+
+
+# ---------------------------------------------------------------------------
 # terms
 # ---------------------------------------------------------------------------
 

@@ -180,7 +180,8 @@ class ElasticMeshExecutor:
                  checkpoint_every: int | None = None,
                  merge: str | None = None, quorum_frac: float = 0.6,
                  tracer: Tracer | None = None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 profiler=None):
         if not isinstance(schedule, ResizeSchedule):
             schedule = ResizeSchedule(schedule)
         if late_policy not in ("merge", "drop"):
@@ -247,6 +248,10 @@ class ElasticMeshExecutor:
         self.metrics = metrics
         if metrics is not None:
             self.transport.log.attach_metrics(metrics)
+        # one profiler shared by every per-M segment executor: each segment
+        # reports its own (m, n_windows) shapes via note_segment, and the
+        # elastic run's total wall is attributed across them window-weighted
+        self.profiler = profiler
         # one MeshExecutor per worker count — each holds its plan_remesh-built
         # mesh and its own compiled-program cache
         self._mesh_ex: dict[int, MeshExecutor] = {}
@@ -278,7 +283,8 @@ class ElasticMeshExecutor:
                     transport=self.transport, use_pallas=self.use_pallas,
                     merge=self.merge, quorum_frac=self.quorum_frac,
                     staleness_gamma=self.staleness_gamma,
-                    tracer=self.tracer, metrics=self.metrics)
+                    tracer=self.tracer, metrics=self.metrics,
+                    profiler=self.profiler)
             else:
                 plan = elastic_lib.plan_remesh(m, prev_data=prev_m,
                                                prev_model=1)
@@ -288,7 +294,8 @@ class ElasticMeshExecutor:
                     transport=self.transport, use_pallas=self.use_pallas,
                     merge=self.merge, quorum_frac=self.quorum_frac,
                     staleness_gamma=self.staleness_gamma,
-                    tracer=self.tracer, metrics=self.metrics)
+                    tracer=self.tracer, metrics=self.metrics,
+                    profiler=self.profiler)
         return self._mesh_ex[m]
 
     def _segment_hook(self, window_idx: int, t0: int, cursor: int,
@@ -368,10 +375,14 @@ class ElasticMeshExecutor:
                               m=data.shape[0] if data.ndim == 3 else None):
             res = self._run(scheme, w0, data, eval_data, tau=tau, eps0=eps0,
                             decay=decay)
+        wall_s = time.perf_counter() - t_wall
         if self.metrics is not None:
             self.metrics.histogram("run_wall_s", executor=self.name,
-                                   scheme=scheme).observe(
-                time.perf_counter() - t_wall)
+                                   scheme=scheme).observe(wall_s)
+        if self.profiler is not None:
+            # segments were noted by the per-M executors' _run_sync calls;
+            # attribute the whole elastic run's wall across them
+            self.profiler.finish_run(wall_s)
         return res
 
     def _run(self, scheme: str, w0: jax.Array, data: jax.Array,

@@ -121,7 +121,8 @@ class MeshExecutor:
                  merge: str | None = None, quorum_frac: float = 0.6,
                  staleness_gamma: float = 0.5,
                  tracer: Tracer | None = None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 profiler=None):
         if not axis:
             raise ValueError("worker axis name must be a non-empty string")
         if merge not in (None, "quorum"):
@@ -179,6 +180,11 @@ class MeshExecutor:
         self.metrics = metrics
         if metrics is not None:
             self.transport.log.attach_metrics(metrics)
+        # roofline attribution (obs.profile.Profiler): when attached, compile
+        # misses go through the AOT path (lower -> compile -> run) so the
+        # profiler parses the HLO of the very executable that runs — zero
+        # extra compiles, and the cached callable is the compiled object
+        self.profiler = profiler
         # compiled-program cache: rebuilding the shard_map closure on every
         # run() would recompile each time; key = everything trace-affecting.
         # Each entry also keeps the CommRecords traced for that program, so
@@ -205,6 +211,13 @@ class MeshExecutor:
             return self.topology.spec
         return self.axis
 
+    @property
+    def _topology_label(self) -> str:
+        """Human label for attribution records: 'flat' or 'HxW'."""
+        if self.topology is not None:
+            return self.topology.describe()
+        return "flat"
+
     # -- comm-aware compile cache -------------------------------------------
 
     def _call_compiled(self, cache_key: tuple, build: Callable, *args):
@@ -215,6 +228,20 @@ class MeshExecutor:
             fn = build()
             mark = log.mark()
             with self.tracer.span("compile", program=str(cache_key[0])):
+                if self.profiler is not None:
+                    # AOT split: .lower() runs the Python trace (appending
+                    # the CommRecords exactly once), .compile() yields the
+                    # post-SPMD HLO + cost_analysis, and the compiled
+                    # executable is cached as the callable — same program,
+                    # same numerics, no second compile
+                    compiled = fn.lower(*args).compile()
+                    try:
+                        cost = compiled.cost_analysis()
+                    except Exception:       # backend without cost support
+                        cost = None
+                    self.profiler.record_program(
+                        cache_key, compiled.as_text(), cost)
+                    fn = compiled
                 out = fn(*args)              # first call traces -> records
             self._compiled[cache_key] = (fn, log.since(mark))
             return out
@@ -271,10 +298,12 @@ class MeshExecutor:
         finally:
             self.last_comm = comm.CommLog.summarize(
                 self.transport.log.since(mark))
+        wall_s = time.perf_counter() - t_wall
         if self.metrics is not None:
             self.metrics.histogram("run_wall_s", executor=self.name,
-                                   scheme=scheme).observe(
-                time.perf_counter() - t_wall)
+                                   scheme=scheme).observe(wall_s)
+        if self.profiler is not None:
+            self.profiler.finish_run(wall_s)
         return res
 
     def run_segment(self, scheme: str, w0: jax.Array, data: jax.Array,
@@ -407,8 +436,10 @@ class MeshExecutor:
         # — the future DynamicMerge trigger signal); the reduce rides an
         # "eval"-tagged collective so the exactly-pinned merge wire bytes are
         # untouched, and the flag joins the cache key because it changes the
-        # compiled program's outputs
-        observe = self.tracer.enabled or self.metrics is not None
+        # compiled program's outputs.  A profiler rides the SAME fork — no
+        # additional program variant beyond observe
+        observe = (self.tracer.enabled or self.metrics is not None
+                   or self.profiler is not None)
 
         def body(w0_in, t0_in, ms_in, data_l, eval_l, *late_in):
             stream = data_l[0]                       # (n, d) local shard
@@ -473,7 +504,15 @@ class MeshExecutor:
         args = (w0, jnp.asarray(t0, jnp.int32), merge_state, data, eval_data)
         if quorum:
             args += (jnp.asarray(late_np),)
+        freshly_compiled = cache_key not in self._compiled
         out = self._call_compiled(cache_key, build, *args)
+        if self.profiler is not None:
+            self.profiler.note_segment(
+                program=cache_key, scheme=scheme,
+                transport=self.transport.name, topology=self._topology_label,
+                m=m, n_windows=n_windows, d=w0.shape[-1], kappa=w0.shape[0],
+                tau=tau, n_eval=eval_data.shape[1],
+                compiled=freshly_compiled)
         if observe:
             w_final, curve, divergence, ms_out = out
         else:
@@ -674,8 +713,22 @@ class MeshExecutor:
                 out_specs=(P(), P()),
                 axis_names=frozenset(axes), check_vma=False))
 
+        freshly_compiled = cache_key not in self._compiled
         w_final, curve = self._call_compiled(cache_key, build, w0, data,
                                              eval_data, done_at)
+        if self.profiler is not None:
+            # eq. 9 has no window barrier — attribute against the nominal
+            # window count n // tau; the distortion probe runs once per
+            # eval_every ticks, folded in as an effective per-window n_eval
+            nominal_windows = max(n // tau, 1)
+            self.profiler.note_segment(
+                program=cache_key, scheme="async_delta",
+                transport=self.transport.name, topology=self._topology_label,
+                m=m, n_windows=nominal_windows, d=w0.shape[-1],
+                kappa=w0.shape[0], tau=tau,
+                n_eval=int(eval_data.shape[1] * len(eval_ticks)
+                           / nominal_windows),
+                compiled=freshly_compiled)
         if self.tracer.enabled or self.metrics is not None:
             self._emit_async_obs(m=m, n=n, tau=tau, done_at=done_at,
                                  eval_ticks=eval_ticks, curve=curve,

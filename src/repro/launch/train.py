@@ -69,7 +69,7 @@ def run_vq(args) -> int:
     from repro.comm.sweep import acceptance_sparse_frac
     from repro.data import synthetic
     from repro.engine import get_executor, get_network
-    from repro.obs import MetricsRegistry, Tracer
+    from repro.obs import ExitFlush, MetricsRegistry, Profiler, Tracer
     from repro.topology import Topology
 
     # --trace records spans + counters for Perfetto; --metrics dumps the
@@ -78,6 +78,13 @@ def run_vq(args) -> int:
     # code paths), so one run can produce both artifacts.
     tracer = Tracer() if (args.trace or args.metrics) else None
     metrics = MetricsRegistry() if (args.trace or args.metrics) else None
+    if args.profile and args.executor != "mesh":
+        # attribution needs the compiled mesh program's HLO — sim replays
+        # oracles, threads run eager python; neither has a program to parse
+        print(f"error: --profile parses the compiled mesh program; got "
+              f"--executor {args.executor}")
+        return 2
+    profiler = Profiler(metrics=metrics) if args.profile else None
 
     key = jax.random.PRNGKey(args.seed)
     kd, kw, ka = jax.random.split(key, 3)
@@ -203,11 +210,25 @@ def run_vq(args) -> int:
                 ex_kw["quorum_frac"] = args.quorum_frac
     ex_kw["tracer"] = tracer
     ex_kw["metrics"] = metrics
+    if profiler is not None:
+        ex_kw["profiler"] = profiler
     try:
         executor = get_executor(ex_name, **ex_kw)
     except ValueError as e:  # bad resize spec
         print(f"error: {e}")
         return 2
+    # arm the crash-path flush BEFORE the run: a chaos kill or Ctrl-C must
+    # still leave the trace/metrics artifacts on disk (the happy path
+    # flushes the same object, so they are written exactly once)
+    flusher = None
+    if args.trace or args.metrics:
+        flusher = ExitFlush(
+            tracer=tracer if args.trace else None,
+            trace_path=args.trace or None,
+            metrics=metrics if args.metrics else None,
+            metrics_path=args.metrics or None,
+            run=f"train-vq-{args.scheme}-{executor.name}",
+            catch_sigterm=True)
 
     print(f"executor={executor.name} scheme={args.scheme} "
           f"M={args.workers} tau={args.tau} network={args.network} "
@@ -252,17 +273,23 @@ def run_vq(args) -> int:
             label = "intra-host" if tier == 0 else "inter-host"
             print(f"  tier {tier} ({label}): wire {t['wire_bytes']:,} B "
                   f"/ logical {t['logical_bytes']:,} B per worker")
+    if profiler is not None:
+        print("profile (roofline attribution):")
+        print(profiler.summary_table())
+        profiler.export_json(args.profile)
+        print(f"profile: {len(profiler.attributions)} run(s) -> "
+              f"{args.profile} (render: python -m repro.obs.report "
+              f"--profile {args.profile})")
     if metrics is not None:
         print("metrics:")
         print(metrics.summary_table())
-    if args.trace:
-        tracer.export_chrome(args.trace)
-        print(f"trace: {len(tracer.spans())} spans -> {args.trace} "
-              f"(load at https://ui.perfetto.dev)")
-    if args.metrics:
-        n_rows = metrics.dump_jsonl(
-            args.metrics, run=f"train-vq-{args.scheme}-{executor.name}")
-        print(f"metrics: {n_rows} rows appended -> {args.metrics}")
+    if flusher is not None:
+        flusher.flush()
+        if args.trace:
+            print(f"trace: {len(tracer.spans())} spans -> {args.trace} "
+                  f"(load at https://ui.perfetto.dev)")
+        if args.metrics:
+            print(f"metrics: appended -> {args.metrics}")
     if ckpt is not None:
         ckpt.wait()
     return 0
@@ -357,6 +384,13 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics", default="", metavar="OUT.jsonl",
                     help="append the metrics registry (counters/gauges/"
                          "histograms) as JSONL, one object per metric")
+    ap.add_argument("--profile", default="", metavar="PROF.json",
+                    help="roofline-attribute the run (mesh executor only): "
+                         "decompose measured per-window wall into analytic "
+                         "compute/HBM terms, the compiled program's HLO "
+                         "collective bytes, and the host residual; prints "
+                         "the attribution table and writes the Profiler "
+                         "export (render with repro.obs.report --profile)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

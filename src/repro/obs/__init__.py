@@ -9,15 +9,19 @@ sink.  ``check_trace`` validates the structural invariants CI gates on.
 from repro.obs.check import check_trace, load_trace
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                format_metric, load_jsonl)
-from repro.obs.trace import NULL_TRACER, CounterEvent, SpanEvent, Tracer
+from repro.obs.profile import Profiler
+from repro.obs.trace import (NULL_TRACER, CounterEvent, ExitFlush, SpanEvent,
+                             Tracer)
 
 __all__ = [
     "NULL_TRACER",
     "Counter",
     "CounterEvent",
+    "ExitFlush",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "Profiler",
     "SpanEvent",
     "Tracer",
     "check_trace",

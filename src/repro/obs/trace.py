@@ -30,9 +30,12 @@ one "thread" per track (worker, tier, host thread).
 
 from __future__ import annotations
 
+import atexit
 import contextlib
 import dataclasses
 import json
+import os
+import signal
 import threading
 import time
 from typing import Any
@@ -61,23 +64,63 @@ class CounterEvent:
 
 
 class Tracer:
-    """Append-only span/counter recorder; thread-safe; monotonic-clock.
+    """Bounded span/counter recorder; thread-safe; monotonic-clock.
 
     ``process``/``track`` name the Perfetto lanes.  Wall spans default to
     ``process="host"`` and the current thread's name; modeled spans pick
     their own (e.g. ``process="ticks", track="worker 3"``).
+
+    Buffers are bounded like ``CommLog``: a long-lived serve/train loop
+    appends forever, so only the newest ``max_spans``/``max_counters``
+    events are kept and the oldest dropped — ``dropped_spans``/
+    ``dropped_counters`` say how many fell off the front, so a truncated
+    export is detectable instead of silently partial.  The defaults are
+    sized so a benchmark-scale run never trims (the obs overhead bench
+    emits thousands of spans, not millions).
     """
 
     WALL_PROCESS = "host"
     TICK_PROCESS = "ticks"
 
-    def __init__(self, *, enabled: bool = True):
+    def __init__(self, *, enabled: bool = True, max_spans: int = 1 << 20,
+                 max_counters: int = 1 << 20):
+        if max_spans < 1 or max_counters < 1:
+            raise ValueError(
+                f"span/counter buffer bounds must be >= 1, got "
+                f"max_spans={max_spans} max_counters={max_counters}")
         self.enabled = enabled
+        self.max_spans = max_spans
+        self.max_counters = max_counters
         self._lock = threading.Lock()
         self._spans: list[SpanEvent] = []
         self._counters: list[CounterEvent] = []
+        self._dropped_spans = 0           # trimmed off the front, ever
+        self._dropped_counters = 0
         self._open = 0                    # wall spans entered but not exited
         self._t0_ns = time.monotonic_ns()
+
+    # -- bounds --------------------------------------------------------------
+
+    @property
+    def dropped_spans(self) -> int:
+        """Spans trimmed off the front of the buffer, ever."""
+        return self._dropped_spans
+
+    @property
+    def dropped_counters(self) -> int:
+        """Counter samples trimmed off the front of the buffer, ever."""
+        return self._dropped_counters
+
+    def _trim(self) -> None:
+        """Drop-oldest down to the bounds (under ``_lock``)."""
+        excess = len(self._spans) - self.max_spans
+        if excess > 0:
+            del self._spans[:excess]
+            self._dropped_spans += excess
+        excess = len(self._counters) - self.max_counters
+        if excess > 0:
+            del self._counters[:excess]
+            self._dropped_counters += excess
 
     # -- clock ---------------------------------------------------------------
 
@@ -102,6 +145,8 @@ class Tracer:
         with self._lock:
             self._spans.append(ev)
             self._open += 1
+            if len(self._spans) > self.max_spans:
+                self._trim()
         try:
             yield ev
         finally:
@@ -124,6 +169,12 @@ class Tracer:
         self._spans.append(SpanEvent(
             name, float(start_us), max(float(dur_us), 0.0),
             process or self.TICK_PROCESS, track, attrs))
+        # bound check stays off the common path: with the default 1M cap
+        # the branch is a len() compare, and only over-cap calls take the
+        # lock to trim — the obs bench's <3% overhead budget holds
+        if len(self._spans) > self.max_spans:
+            with self._lock:
+                self._trim()
 
     def counter(self, name: str, value: float, ts_us: float | None = None, *,
                 process: str | None = None) -> None:
@@ -134,6 +185,9 @@ class Tracer:
             name, float(value),
             self.now_us() if ts_us is None else float(ts_us),
             process or self.TICK_PROCESS))
+        if len(self._counters) > self.max_counters:
+            with self._lock:
+                self._trim()
 
     # -- introspection -------------------------------------------------------
 
@@ -206,3 +260,75 @@ class Tracer:
 
 
 NULL_TRACER = Tracer(enabled=False)
+
+
+class ExitFlush:
+    """Flush trace/metrics exports even when the run dies early.
+
+    A chaos-killed or Ctrl-C'd training loop never reaches the
+    end-of-run ``export_chrome``/``dump_jsonl`` calls, losing exactly
+    the artifacts needed to debug why it died.  Constructing an
+    ``ExitFlush`` registers an ``atexit`` hook (and, opt-in, a SIGTERM
+    hook — the chaos sweep and container runtimes kill with SIGTERM)
+    that writes whatever the tracer/metrics hold *now*.  ``flush()`` is
+    idempotent: the normal happy-path flush disarms the exit hook, so
+    artifacts are written exactly once either way.
+
+    Usable as a context manager for scoped runs::
+
+        with ExitFlush(tracer=tr, trace_path="t.json") as fl:
+            executor.run(...)
+        # flushed here, and also on KeyboardInterrupt/SystemExit
+    """
+
+    def __init__(self, *, tracer=None, trace_path: str | None = None,
+                 metrics=None, metrics_path: str | None = None,
+                 run: str | None = None, catch_sigterm: bool = False):
+        if tracer is None and metrics is None:
+            raise ValueError("ExitFlush needs a tracer and/or metrics")
+        self.tracer = tracer
+        self.trace_path = trace_path
+        self.metrics = metrics
+        self.metrics_path = metrics_path
+        self.run = run
+        self._done = False
+        self._lock = threading.Lock()
+        self._prev_sigterm = None
+        atexit.register(self._atexit)
+        if catch_sigterm and threading.current_thread() is threading.main_thread():
+            self._prev_sigterm = signal.signal(signal.SIGTERM, self._on_sigterm)
+
+    def _atexit(self) -> None:
+        self.flush()
+
+    def _on_sigterm(self, signum, frame) -> None:
+        self.flush()
+        # restore and re-deliver so the process still dies with the
+        # default SIGTERM semantics (exit code 143, parent sees the signal)
+        signal.signal(signum, self._prev_sigterm or signal.SIG_DFL)
+        os.kill(os.getpid(), signum)
+
+    def flush(self) -> dict[str, str]:
+        """Write the pending exports; no-op on every call after the first."""
+        with self._lock:
+            if self._done:
+                return {}
+            self._done = True
+        atexit.unregister(self._atexit)
+        if self._prev_sigterm is not None:
+            with contextlib.suppress(ValueError):   # not main thread at exit
+                signal.signal(signal.SIGTERM, self._prev_sigterm)
+        written: dict[str, str] = {}
+        if self.tracer is not None and self.trace_path:
+            self.tracer.export_chrome(self.trace_path)
+            written["trace"] = self.trace_path
+        if self.metrics is not None and self.metrics_path:
+            self.metrics.dump_jsonl(self.metrics_path, run=self.run)
+            written["metrics"] = self.metrics_path
+        return written
+
+    def __enter__(self) -> "ExitFlush":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.flush()

@@ -489,3 +489,70 @@ def test_no_wall_clock_timing_under_src():
         if "time.time(" in p.read_text()
     ]
     assert offenders == [], f"time.time() used in {offenders}"
+
+
+# ---------------------------------------------------------------------------
+# bounded buffers + exit flush (crash-surviving exports)
+# ---------------------------------------------------------------------------
+
+def test_tracer_buffers_drop_oldest_with_count():
+    t = Tracer(max_spans=5, max_counters=3)
+    for i in range(12):
+        t.add_span(f"s{i}", 0.0, 1.0, track="tk")
+        t.counter("c", float(i))
+    spans = t.spans()
+    assert len(spans) == 5 and t.dropped_spans == 7
+    # drop-oldest: the survivors are the NEWEST five
+    assert [e.name for e in spans] == [f"s{i}" for i in range(7, 12)]
+    assert len(t.counters()) == 3 and t.dropped_counters == 9
+    assert [c.value for c in t.counters()] == [9.0, 10.0, 11.0]
+    # wall spans ride the same bound
+    with t.span("w"):
+        pass
+    assert len(t.spans()) == 5 and t.dropped_spans == 8
+    assert t.spans()[-1].name == "w"
+
+
+def test_tracer_bounds_validate():
+    with pytest.raises(ValueError):
+        Tracer(max_spans=0)
+    with pytest.raises(ValueError):
+        Tracer(max_counters=0)
+
+
+def test_exit_flush_requires_a_sink():
+    from repro.obs import ExitFlush
+    with pytest.raises(ValueError):
+        ExitFlush()
+
+
+def test_exit_flush_writes_once_and_is_idempotent(tmp_path):
+    from repro.obs import ExitFlush
+    t = Tracer()
+    t.add_span("a", 0.0, 1.0, track="tk")
+    reg = MetricsRegistry()
+    reg.counter("x").inc(3)
+    tp, mp = str(tmp_path / "t.json"), str(tmp_path / "m.jsonl")
+    fl = ExitFlush(tracer=t, trace_path=tp, metrics=reg, metrics_path=mp,
+                   run="r1")
+    written = fl.flush()
+    assert written == {"trace": tp, "metrics": mp}
+    spans = [e for e in load_trace(tp) if e.get("ph") == "X"]
+    assert [s["name"] for s in spans] == ["a"]
+    rows = load_jsonl(mp)
+    assert rows[-1]["name"] == "x" and rows[-1]["value"] == 3
+    # second flush is a no-op: metrics JSONL must not double-append
+    assert fl.flush() == {}
+    assert len(load_jsonl(mp)) == len(rows)
+
+
+def test_exit_flush_context_manager_flushes_on_exception(tmp_path):
+    from repro.obs import ExitFlush
+    t = Tracer()
+    t.add_span("died", 0.0, 1.0, track="tk")
+    tp = str(tmp_path / "t.json")
+    with pytest.raises(RuntimeError):
+        with ExitFlush(tracer=t, trace_path=tp):
+            raise RuntimeError("chaos kill")
+    spans = [e for e in load_trace(tp) if e.get("ph") == "X"]
+    assert [s["name"] for s in spans] == ["died"]

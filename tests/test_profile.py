@@ -1,0 +1,325 @@
+"""Roofline-attributed profiling tests (the PR-8 tentpole).
+
+The profiler's contract is cross-checked three independent ways:
+
+* the attribution terms (compute/memory/collective + host residual) must
+  sum to the MEASURED per-window wall within the 15% acceptance bar;
+* the collective bytes it reads out of the compiled program's HLO
+  (trip-count-corrected) must match the transport's own CommLog
+  logical-byte accounting of the same program near-exactly — two
+  derivations of the same traffic, one from compiled-shape regexes and
+  one from trace-time records;
+* the while-loop trip counts inferred from the HLO must be the engine's
+  real loop structure (outer = n_windows, inner = tau).
+"""
+
+from repro.xla_flags import force_host_devices
+
+force_host_devices(8)
+
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.data import synthetic  # noqa: E402
+from repro.distributed import roofline  # noqa: E402
+from repro.engine import (ElasticMeshExecutor, InstantNetwork,  # noqa: E402
+                          MeshExecutor)
+from repro.obs import MetricsRegistry, Profiler  # noqa: E402
+
+M, N, D, KAPPA, TAU = 4, 400, 8, 16, 50
+
+
+def _data(m=M, n=N):
+    key = jax.random.PRNGKey(0)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, m, n=n, d=D)
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, D), KAPPA)
+    return w0, data, data[:, :100], ka
+
+
+def _profiled_run(scheme, *, m=M):
+    reg = MetricsRegistry()
+    prof = Profiler(metrics=reg)
+    ex = MeshExecutor(network=InstantNetwork(), profiler=prof, metrics=reg)
+    w0, data, eval_data, key = _data(m=m)
+    ex.run(scheme, w0, data, eval_data, tau=TAU, eps0=0.5, key=key)
+    return prof, reg, ex
+
+
+@pytest.mark.devices(4)
+@pytest.mark.parametrize("scheme", ["average", "delta", "async_delta"])
+def test_attribution_sums_to_measured_wall(scheme):
+    prof, _, _ = _profiled_run(scheme)
+    assert len(prof.attributions) == 1
+    a = prof.attributions[0]
+    assert a["scheme"] == scheme
+    assert a["consistency"] <= 0.15
+    total = sum(a[f"t_{t}_s"] for t in ("compute", "memory", "collective",
+                                        "host"))
+    assert total == pytest.approx(a["attributed_window_s"])
+    assert a["window_wall_s"] > 0
+    # compiled-in-run flagged: the first run pays the compile
+    assert a["compiled_in_run"] is True
+
+
+@pytest.mark.devices(4)
+@pytest.mark.parametrize("scheme", ["average", "delta", "async_delta"])
+def test_hlo_bytes_match_commlog_logical_bytes(scheme):
+    """Two independent derivations of the merge traffic must agree."""
+    prof, _, ex = _profiled_run(scheme)
+    a = prof.attributions[0]
+    by_tag = ex.transport.log.logical_bytes_by_tag()
+    commlog_total = sum(by_tag.values())
+    hlo_total = a["collective_bytes_per_window"] * a["n_windows"]
+    assert hlo_total == pytest.approx(commlog_total, rel=1e-6)
+
+
+@pytest.mark.devices(4)
+def test_trip_counts_pin_the_window_scan():
+    """Sync program: outer while = n_windows, inner while = tau."""
+    prof, _, _ = _profiled_run("delta")
+    (prog,) = prof.programs.values()
+    trips = sorted(t for _, t in prog.loops)
+    assert N // TAU in trips, trips        # outer window scan
+    assert TAU in trips, trips             # inner step scan
+
+
+@pytest.mark.devices(4)
+def test_analytic_flops_cross_check_xla_cost_analysis():
+    """The VqCell's analytic count must live within an order of magnitude
+    of XLA's own cost_analysis for the same program (the analytic count
+    is per logical worker and XLA counts the loop body once with fusion
+    freedom, so this is a sanity band, not an equality)."""
+    prof, _, _ = _profiled_run("delta")
+    (prog,) = prof.programs.values()
+    if prog.cost_flops is None:
+        pytest.skip("backend exposes no cost_analysis")
+    cell = roofline.VqCell(d=D, kappa=KAPPA, tau=TAU, n_eval=100)
+    analytic_body = cell.window_flops()
+    assert 0.05 < prog.cost_flops / analytic_body < 50.0
+
+
+@pytest.mark.devices(4)
+def test_metrics_emission_gauges_and_counters():
+    prof, reg, _ = _profiled_run("average")
+    for term in ("compute", "memory", "collective", "host"):
+        g = reg.gauge("roofline_efficiency", term=term, scheme="average",
+                      transport="xla")
+        assert g.value >= 0.0
+        c = reg.counter(f"attributed_{term}_ns", scheme="average",
+                        transport="xla")
+        assert c.value >= 0.0
+    a = prof.attributions[0]
+    host_ns = reg.counter("attributed_host_ns", scheme="average",
+                          transport="xla").value
+    assert host_ns == pytest.approx(
+        a["t_host_s"] * a["n_windows"] * 1e9, rel=1e-6)
+
+
+@pytest.mark.devices(4)
+def test_second_run_reuses_compiled_program():
+    """The profiler's AOT path must cache: run #2 compiles nothing and is
+    flagged as warm (compiled_in_run=False)."""
+    reg = MetricsRegistry()
+    prof = Profiler(metrics=reg)
+    ex = MeshExecutor(network=InstantNetwork(), profiler=prof, metrics=reg)
+    w0, data, eval_data, key = _data()
+    ex.run("delta", w0, data, eval_data, tau=TAU, eps0=0.5, key=key)
+    n_programs = len(prof.programs)
+    ex.run("delta", w0, data, eval_data, tau=TAU, eps0=0.5, key=key)
+    assert len(prof.programs) == n_programs
+    assert [a["compiled_in_run"] for a in prof.attributions] == [True, False]
+
+
+@pytest.mark.devices(8)
+def test_elastic_shares_one_profiler_across_segments():
+    prof = Profiler()
+    ex = ElasticMeshExecutor([(20, 4)], network=InstantNetwork(),
+                             profiler=prof)
+    w0, data, eval_data, key = _data(m=8)
+    ex.run("delta", w0, data, eval_data, tau=10, eps0=0.5, key=key)
+    # exactly ONE attribution (the wall-owning elastic run), built from
+    # the per-M segment executors' notes
+    assert len(prof.attributions) == 1
+    a = prof.attributions[0]
+    assert a["segments"] == 2
+    assert a["consistency"] <= 0.15
+
+
+@pytest.mark.devices(4)
+def test_export_json_roundtrip(tmp_path):
+    prof, _, _ = _profiled_run("delta")
+    p = tmp_path / "prof.json"
+    prof.export_json(str(p))
+    doc = json.loads(p.read_text())
+    assert doc["attributions"] == prof.attributions
+    assert set(doc["programs"]) == set(map(str, prof.programs))
+    table = prof.summary_table()
+    assert "delta" in table and "consistency" in table
+
+
+def test_profiler_empty_run_is_inert():
+    prof = Profiler()
+    assert prof.finish_run(1.0) is None
+    assert prof.attributions == []
+
+
+# ---------------------------------------------------------------------------
+# regression-gate units (benchmarks/check_regression.py, profile suite)
+# ---------------------------------------------------------------------------
+
+def _attr(scheme, *, consistency=0.01, coll=520.0, eff=1e-7, wall=0.5):
+    n_windows = 40
+    return {
+        "kind": "attribution", "scheme": scheme, "transport": "xla",
+        "m": 8, "n": 2000, "d": 8, "kappa": 16, "tau": 50,
+        "wall_s": wall, "commlog_logical_bytes_per_window": coll,
+        "attribution": {
+            "scheme": scheme, "transport": "xla", "n_windows": n_windows,
+            "wall_s": wall, "window_wall_s": wall / n_windows,
+            "t_compute_s": 1e-8, "t_memory_s": 1e-7,
+            "t_collective_s": 1e-8, "t_host_s": wall / n_windows,
+            "consistency": consistency,
+            "collective_bytes_per_window": coll,
+            "efficiency": {"compute": eff, "memory": 1e-6,
+                           "collective": 1e-7, "host": 0.99},
+        },
+    }
+
+
+def _doc(*records):
+    return {"suite": "profile", "devices": 8, "backend": "cpu",
+            "results": list(records)}
+
+
+def test_check_profile_passes_clean_self_diff():
+    from benchmarks.check_regression import check_profile
+    doc = _doc(_attr("average"), _attr("delta"))
+    gates = []
+    ok, msgs = check_profile(doc, doc, gates=gates)
+    assert ok
+    assert all(m.startswith("ok") for m in msgs)
+    assert {g["name"] for g in gates} == {
+        "profile attribution consistency (worst)",
+        "profile compute efficiency (min)"}
+
+
+def test_check_profile_fails_consistency_and_prints_deltas():
+    from benchmarks.check_regression import check_profile
+    base = _doc(_attr("delta"))
+    fresh = _doc(_attr("delta", consistency=0.4))
+    ok, msgs = check_profile(base, fresh)
+    assert not ok
+    assert any("FAIL" in m and "consistency" not in m and "0.4" in m
+               for m in msgs)
+    # the failure is attributed: per-term deltas appear
+    assert any(m.startswith("attribution [delta]") for m in msgs)
+
+
+def test_check_profile_fails_on_byte_drift_and_commlog_mismatch():
+    from benchmarks.check_regression import check_profile
+    base = _doc(_attr("delta", coll=520.0))
+    fresh = _doc(_attr("delta", coll=520.0))
+    fresh["results"][0]["attribution"]["collective_bytes_per_window"] = 640.0
+    ok, msgs = check_profile(base, fresh)
+    assert not ok
+    assert any("drifted 520" in m for m in msgs)
+    assert any("CommLog" in m and "FAIL" in m for m in msgs)
+
+
+def test_check_profile_fails_below_efficiency_floor():
+    from benchmarks.check_regression import check_profile
+    base = _doc(_attr("delta"))
+    fresh = _doc(_attr("delta", eff=0.0))
+    ok, msgs = check_profile(base, fresh)
+    assert not ok
+    assert any("efficiency" in m and "FAIL" in m for m in msgs)
+
+
+def test_check_profile_config_mismatch_raises():
+    from benchmarks.check_regression import check_profile
+    base = _doc(_attr("delta"))
+    fresh = _doc(_attr("delta"))
+    fresh["results"][0]["tau"] = 10
+    with pytest.raises(ValueError, match="config"):
+        check_profile(base, fresh)
+
+
+def test_check_profile_missing_scheme_raises():
+    from benchmarks.check_regression import check_profile
+    base = _doc(_attr("delta"), _attr("average"))
+    fresh = _doc(_attr("delta"))
+    with pytest.raises(ValueError, match="missing"):
+        check_profile(base, fresh)
+
+
+def test_gate_table_renders_values_and_status():
+    from benchmarks.check_regression import gate_table
+    gates = [{"name": "a", "value": 1.1, "bar": 1.25, "cmp": "<="},
+             {"name": "b", "value": 2.0, "bar": 4.0, "cmp": ">="}]
+    table = gate_table(gates)
+    assert "a" in table and "1.25" in table
+    assert "FAIL" in table and "ok" in table
+
+
+def test_check_profile_cli_exit_codes(tmp_path, capsys):
+    from benchmarks.check_regression import main as gate_main
+    good = tmp_path / "base.json"
+    good.write_text(json.dumps(_doc(_attr("delta"))))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_doc(_attr("delta", consistency=0.9))))
+    assert gate_main(["--baseline", str(good), "--fresh", str(good)]) == 0
+    out = capsys.readouterr().out
+    assert "gate" in out and "PASS" in out
+    assert gate_main(["--baseline", str(good), "--fresh", str(bad)]) == 1
+    assert gate_main(["--baseline", str(good),
+                      "--fresh", str(tmp_path / "nope.json")]) == 3
+
+
+# ---------------------------------------------------------------------------
+# the perf-trajectory report (obs/report.py)
+# ---------------------------------------------------------------------------
+
+def test_report_renders_self_contained_html(tmp_path):
+    from repro.obs import report
+    (tmp_path / "BENCH_profile.json").write_text(
+        json.dumps(_doc(_attr("delta"), _attr("average"))))
+    (tmp_path / "BENCH_engine.json").write_text(json.dumps({
+        "suite": "engine", "devices": 8, "backend": "cpu",
+        "results": [{"executor": "mesh", "m": 8, "wall_s": 1.25,
+                     "curve": [0.5, 0.4, 0.3]}]}))
+    (tmp_path / "BENCH_engine.fresh.json").write_text("{ not json")
+    out = tmp_path / "perf_report.html"
+    rc = report.main(["--dir", str(tmp_path), "--out", str(out)])
+    assert rc == 0
+    text = out.read_text()
+    # self-contained: no external fetches of any kind
+    for needle in ("http://", "https://", "<script", "<link", "@import"):
+        assert needle not in text, needle
+    # both suites render, attribution shows its stacked bars + sparkline
+    assert "Roofline attribution" in text
+    assert "engine" in text and "delta" in text
+    assert "<svg" in text and "polyline" in text
+
+
+def test_report_includes_profiler_exports(tmp_path):
+    from repro.obs import report
+    prof_doc = {"attributions": [_attr("delta")["attribution"]],
+                "programs": {}}
+    p = tmp_path / "prof.json"
+    p.write_text(json.dumps(prof_doc))
+    out = tmp_path / "r.html"
+    rc = report.main(["--dir", str(tmp_path), "--out", str(out),
+                      "--profile", str(p)])
+    assert rc == 0
+    text = out.read_text()
+    assert "prof.json" in text and "Roofline attribution" in text
+
+
+def test_report_empty_dir_still_writes(tmp_path):
+    from repro.obs import report
+    out = tmp_path / "r.html"
+    assert report.main(["--dir", str(tmp_path), "--out", str(out)]) == 0
+    assert "<html" in out.read_text()
