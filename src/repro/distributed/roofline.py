@@ -235,6 +235,7 @@ class VqCell:
     n_eval: int = 0        # eval points scored per window (0 = no probe)
     bm: int = 128          # Pallas block rows (HBM tiling granularity)
     dtype_bytes: int = 4   # codebook/point element width (f32)
+    bk: int = 128          # Pallas codebook-block rows (blocked/fused regime)
 
     def step_flops(self) -> float:
         """One stochastic VQ step: distances ``2*kappa*d`` (|z-w|^2 via the
@@ -269,6 +270,37 @@ class VqCell:
     def merge_collective_bytes(self) -> float:
         """Logical all-reduce payload of one dense merge: the codebook."""
         return self.kappa * self.d * self.dtype_bytes
+
+    # -- blocked/fused delta kernel terms (the autotuner's objective) ------
+
+    def delta_grid(self, batch: int) -> tuple[int, int]:
+        """(codebook_blocks, batch_blocks) of the fused blocked kernel's
+        two-sweep grid, after ``ops.py``'s padding to tile multiples."""
+        kb = -(-self.kappa // self.bk)
+        nb = -(-batch // self.bm)
+        return kb, nb
+
+    def delta_flops(self, batch: int) -> float:
+        """One fused assign+delta dispatch over a (batch, d) block of
+        points: the distance sweep's expanded dot + argmin and the
+        accumulate sweep's one-hot matmul scatter."""
+        k, d = self.kappa, self.d
+        distance = 2 * batch * k * d + batch * k
+        accumulate = 2 * batch * k * d + batch * k
+        return distance + accumulate
+
+    def delta_hbm_bytes(self, batch: int) -> float:
+        """HBM traffic of the fused blocked kernel INCLUDING refetches:
+        both sweeps re-stream each (bm, d) point block once per codebook
+        block and each (bk, d) codebook block once per batch block — the
+        tile-size-dependent term the autotuner trades against VMEM
+        residency (larger tiles => fewer refetches => fewer bytes)."""
+        kb, nb = self.delta_grid(batch)
+        b = self.dtype_bytes
+        k, d = self.kappa, self.d
+        sweeps = 2 * (kb * batch * d * b + nb * k * d * b)
+        outputs = k * d * b + k * b + 2 * batch * b   # zsum, counts, arg+min
+        return sweeps + outputs
 
 
 def vq_roofline_terms(cell: VqCell,

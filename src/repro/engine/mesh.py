@@ -83,19 +83,34 @@ def _validate_mesh(mesh: Mesh, axes: tuple[str, ...], m: int) -> None:
 
 def _local_window(w0: jax.Array, zwin: jax.Array, t0: jax.Array, *,
                   eps0: float, decay: float, use_pallas: bool,
-                  vmem_budget: int | None = None
+                  vmem_budget: int | None = None, fused: bool = True
                   ) -> tuple[jax.Array, jax.Array]:
     """tau sequential VQ steps (eq. 1) on one device; returns (delta, w)."""
+    tau = zwin.shape[0]
+    kappa, d = w0.shape
+    if (use_pallas and fused
+            and ops.window_fits_vmem(kappa, d, tau,
+                                     budget_bytes=vmem_budget)):
+        # whole window in ONE Pallas dispatch: tau steps with the codebook
+        # VMEM-resident, eliminating tau-1 per-step kernel launches — the
+        # step schedule is precomputed (it depends only on t0) and the
+        # kernel replays the per-step float ops exactly, so this path is
+        # bit-identical to the scan below (the engine benchmark gates it)
+        eps = vq.default_steps(t0 + 1 + jnp.arange(tau, dtype=jnp.int32),
+                               eps0=eps0, decay=decay)
+        w = ops.vq_window(zwin, w0, eps)
+        return w0 - w, w
 
     def body(carry, z):
         w, t = carry
         eps = vq.default_steps(t + 1, eps0=eps0, decay=decay)
         if use_pallas:
-            # fused distance+argmin+scatter kernel (blocked-assign fallback
-            # past the VMEM budget); batch of one point, so counts/zsum
+            # fused distance+argmin+scatter kernel (blocked fallback past
+            # the VMEM budget); batch of one point, so counts/zsum
             # reduce exactly to eq. (4)'s H(z, w)
             counts, zsum = ops.vq_delta_routed(z[None, :], w,
-                                               budget_bytes=vmem_budget)
+                                               budget_bytes=vmem_budget,
+                                               fused=fused)
             h = counts[:, None] * w - zsum
         else:
             h = vq.H(z, w)
@@ -114,7 +129,8 @@ class MeshExecutor:
                  network: NetworkModel | None = None, *,
                  topology: Topology | None = None,
                  transport: comm.Transport | str | None = None,
-                 use_pallas: bool = True, eval_every: int = 10,
+                 use_pallas: bool = True, fused: bool = True,
+                 eval_every: int = 10,
                  vmem_budget_bytes: int | None = None,
                  on_window: Callable[[int, jax.Array], None] | None = None,
                  publish_every: int = 1,
@@ -155,6 +171,12 @@ class MeshExecutor:
         self.transport = comm.get_transport(
             transport if transport is not None else "xla")
         self.use_pallas = use_pallas
+        # fused=True rides the one-dispatch Pallas hot path (window kernel
+        # when the codebook fits VMEM, fused blocked assign+delta past it)
+        # plus the double-buffered publish drain; fused=False keeps the
+        # per-step scan + XLA segment-sum route as the benchmark comparator.
+        # Both are bit-identical — the flag trades dispatches, not math.
+        self.fused = fused
         self.eval_every = eval_every
         self.vmem_budget_bytes = vmem_budget_bytes
         # merge override: None = the scheme's own strategy (the default,
@@ -356,11 +378,34 @@ class MeshExecutor:
         firing ``on_window`` after each chunk — same numerics (the window
         scan is sequential, and the merge/transport state threads across
         chunks exactly as it threads across the scan), at most two extra
-        compiled programs (the chunk shape and one remainder shape)."""
+        compiled programs (the chunk shape and one remainder shape).
+
+        The drain is DOUBLE-BUFFERED (when ``fused`` is on): chunk k+1 is
+        dispatched before chunk k's host-side reads (``np.asarray`` on the
+        curve, the tick conversion, the ``on_window`` publish) block on its
+        result — the latency-hiding pattern ``comm/ring.py`` uses for
+        neighbor hops, lifted to the host loop, so the merge collective at
+        the tail of one chunk overlaps the next chunk's compute.  The same
+        programs run in the same order with the same inputs (chunk k+1
+        depends on chunk k only through device arrays), so the pipelining
+        is bit-stable; ``on_window`` still fires in chunk order."""
         n_windows = data.shape[1] // tau
         w, t, done = w0, t0, 0
         curves, ticks = [], []
         wt, ms = None, None
+        pending = None          # (result, windows done BEFORE its chunk)
+
+        def drain(slot, wt):
+            res, base = slot
+            if wt is None:
+                # per-window tick cost as the segment run charged it
+                # (window_ticks + any bandwidth transfer charge)
+                wt = int(res.wall_ticks[0])
+            curves.append(np.asarray(res.distortion))
+            ticks.append(base * wt + np.asarray(res.wall_ticks))
+            self.on_window(base + res.wall_ticks.shape[0], res.w_shared)
+            return wt
+
         while done < n_windows:
             k = min(self.publish_every, n_windows - done)
             seg = data[:, done * tau:(done + k) * tau]
@@ -368,16 +413,17 @@ class MeshExecutor:
                 res, ms = self._run_sync(mesh, scheme, w, seg, eval_data,
                                          tau=tau, eps0=eps0, decay=decay,
                                          t0=t, merge_state=ms)
-            if wt is None:
-                # per-window tick cost as the segment run charged it
-                # (window_ticks + any bandwidth transfer charge)
-                wt = int(res.wall_ticks[0])
-            w = res.w_shared
-            curves.append(np.asarray(res.distortion))
-            ticks.append(done * wt + np.asarray(res.wall_ticks))
+            w = res.w_shared     # device-side dependency only: no host sync
+            if pending is not None:
+                wt = drain(pending, wt)
+            if self.fused:
+                pending = (res, done)
+            else:
+                wt = drain((res, done), wt)
             done += k
             t += k * tau
-            self.on_window(done, w)
+        if pending is not None:
+            wt = drain(pending, wt)
         if not curves:
             raise ValueError(
                 f"need at least one tau={tau} window, got n={data.shape[1]}")
@@ -420,6 +466,7 @@ class MeshExecutor:
             late_np = None
         transport = self.transport
         use_pallas = self.use_pallas
+        fused = self.fused
         vmem_budget = self.vmem_budget_bytes
         if merge_state is None:
             # host-side merge state carries a leading per-worker dim: the
@@ -453,7 +500,8 @@ class MeshExecutor:
                 w_srd, t, ms = carry
                 _, w_fin = _local_window(w_srd, zwin, t, eps0=eps0,
                                          decay=decay, use_pallas=use_pallas,
-                                         vmem_budget=vmem_budget)
+                                         vmem_budget=vmem_budget,
+                                         fused=fused)
                 if quorum:
                     w_srd, ms = strategy(w_srd, w_fin, axis, ms,
                                          calls=n_windows, late=x[1])
@@ -484,7 +532,7 @@ class MeshExecutor:
             return w_srd, ys, ms_out
 
         cache_key = ("sync", scheme, mesh, w0.shape, data.shape,
-                     eval_data.shape, tau, eps0, decay, use_pallas,
+                     eval_data.shape, tau, eps0, decay, use_pallas, fused,
                      vmem_budget, observe)
         if quorum:
             cache_key += ("quorum", self.quorum_frac, self.staleness_gamma)
@@ -649,6 +697,7 @@ class MeshExecutor:
         eval_ticks = np.arange(eval_every - 1, n, eval_every)
         transport = self.transport
         use_pallas = self.use_pallas
+        fused = self.fused
         vmem_budget = self.vmem_budget_bytes
 
         def body(w0_in, data_l, eval_l, done_at_l):
@@ -662,7 +711,7 @@ class MeshExecutor:
                 # local VQ step (1st line of eq. 9), Pallas hot path
                 if use_pallas:
                     counts, zsum = ops.vq_delta_routed(
-                        z[None, :], w, budget_bytes=vmem_budget)
+                        z[None, :], w, budget_bytes=vmem_budget, fused=fused)
                     h = counts[:, None] * w - zsum
                 else:
                     h = vq.H(z, w)
@@ -705,7 +754,8 @@ class MeshExecutor:
             return w_srd_final, curve
 
         cache_key = ("async", mesh, w0.shape, data.shape, eval_data.shape,
-                     tau, eps0, decay, eval_every, use_pallas, vmem_budget)
+                     tau, eps0, decay, eval_every, use_pallas, fused,
+                     vmem_budget)
 
         def build():
             return jax.jit(compat.shard_map(

@@ -14,7 +14,9 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import vq_assign as _k
+from repro.kernels import vq_fused as _f
 
 # Conservative per-core VMEM budget for kernel residency planning.  TPU cores
 # have ~16 MiB of VMEM (pallas guide §Memory Spaces); half of it is left for
@@ -39,17 +41,47 @@ def vmem_budget_bytes(budget_bytes: int | None = None) -> int:
     return int(env) if env else DEFAULT_VMEM_BUDGET_BYTES
 
 
-def delta_vmem_bytes(kappa: int, d: int, *, bm: int = 128) -> int:
-    """f32 VMEM residency of the fused ``vq_delta`` kernel for one grid step:
+def delta_vmem_bytes(kappa: int, d: int, *, bm: int = 128,
+                     bk: int | None = None, batch: int | None = None,
+                     dtype_bytes: int = 4) -> int:
+    """VMEM residency of one delta-kernel grid step — the ONE cost model the
+    runtime router and the autotuner share.
+
+    ``bk=None`` (or ``bk >= kappa``): the full-codebook ``vq_delta`` kernel —
     codebook + zsum accumulator (both (kappa, d)), the counts column, one
-    (bm, d) batch block, and the (bm, kappa) distance/one-hot tiles."""
-    return 4 * (2 * kappa * d + kappa + bm * d + 2 * bm * kappa)
+    (bm, d) batch block, and the (bm, kappa) distance/one-hot tiles.
+
+    ``bk < kappa``: the fused blocked assign+delta kernel — one (bm, d)
+    point block, the (bk, d) codebook block and its (bk, d)+(bk, 1)
+    accumulators, the (bm, bk) distance/one-hot tiles, and the running
+    (batch, 1) argmin/min outputs that stay resident for the whole grid
+    (``batch`` defaults to ``bm`` when the caller has not fixed it).
+    """
+    if bk is None or bk >= kappa:
+        return dtype_bytes * (2 * kappa * d + kappa + bm * d + 2 * bm * kappa)
+    rows = bm if batch is None else max(batch, bm)
+    return dtype_bytes * (bm * d + 2 * bk * d + bk + 2 * bm * bk + 2 * rows)
 
 
 def delta_fits_vmem(kappa: int, d: int, *, bm: int = 128,
                     budget_bytes: int | None = None) -> bool:
     """Can the full-codebook ``vq_delta`` kernel hold ``kappa*d`` in VMEM?"""
     return delta_vmem_bytes(kappa, d, bm=bm) <= vmem_budget_bytes(budget_bytes)
+
+
+def window_vmem_bytes(kappa: int, d: int, tau: int, *,
+                      dtype_bytes: int = 4) -> int:
+    """Residency of the fused window kernel: the (tau, d) point stream plus
+    its hoisted norms/steps, and ~4 (kappa, d)-sized codebook terms (w, wout,
+    zsum/h intermediates) with the one-hot/distance columns."""
+    return dtype_bytes * (tau * (d + 2) + 4 * kappa * d + 2 * kappa)
+
+
+def window_fits_vmem(kappa: int, d: int, tau: int, *,
+                     budget_bytes: int | None = None) -> bool:
+    """Can a whole tau-step window run codebook-resident in one dispatch?"""
+    return (window_vmem_bytes(kappa, d, tau)
+            <= vmem_budget_bytes(budget_bytes))
 
 
 def codebook_fits_vmem(kappa: int, d: int, *,
@@ -59,6 +91,16 @@ def codebook_fits_vmem(kappa: int, d: int, *,
     return 4 * kappa * d <= vmem_budget_bytes(budget_bytes)
 
 
+def _bm_floor(interpret: bool) -> int:
+    """Minimum batch-block rows.  Real TPUs want >= 8 rows for sublane
+    alignment; the interpret backend has no such constraint — and the fused
+    window kernel's bitwise contract needs the batch-of-one per-step block
+    to keep its true single-row shape there, because XLA:CPU's
+    reduction/matmul emission is shape-dependent (see
+    ``vq_fused._window_kernel``)."""
+    return 1 if interpret else 8
+
+
 def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
     pad = (-x.shape[0]) % mult
     if pad == 0:
@@ -66,13 +108,23 @@ def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
     return jnp.pad(x, ((0, pad), (0, 0)))
 
 
+def _tiles(z: jax.Array, w: jax.Array, bm: int | None, bk: int | None,
+           kind: str, budget_bytes: int | None = None) -> tuple[int, int]:
+    """Resolve (bm, bk): explicit values win, ``None`` comes from the
+    autotuner (legacy 128s when the tuner is off).  Runs at trace time —
+    shapes are static — so jitted callers pay nothing per step."""
+    if bm is None or bk is None:
+        cfg = autotune.pick_tiles(z.shape[0], w.shape[0], w.shape[1],
+                                  kind=kind, budget_bytes=budget_bytes)
+        bm = cfg.bm if bm is None else bm
+        bk = cfg.bk if bk is None else bk
+    return bm, bk
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
-def vq_assign(z: jax.Array, w: jax.Array, *, bm: int = 128, bk: int = 128,
-              interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
-    """Nearest-prototype assignment; same contract as ``ref.vq_assign_ref``."""
-    interpret = _interpret_default() if interpret is None else interpret
+def _vq_assign(z, w, *, bm: int, bk: int, interpret: bool):
     batch, kappa = z.shape[0], w.shape[0]
-    bm_ = min(bm, max(8, batch))
+    bm_ = min(bm, max(_bm_floor(interpret), batch))
     zp = _pad_rows(z, bm_)
     wp = _pad_rows(w, bk)
     assign, mind = _k.vq_assign_pallas(zp, wp, bm=bm_, bk=min(bk, wp.shape[0]),
@@ -80,30 +132,51 @@ def vq_assign(z: jax.Array, w: jax.Array, *, bm: int = 128, bk: int = 128,
     return assign[:batch], mind[:batch]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def vq_delta(z: jax.Array, w: jax.Array, *, bm: int = 128,
-             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
-    """Fused minibatch displacement stats; contract of ``ref.vq_delta_ref``."""
+def vq_assign(z: jax.Array, w: jax.Array, *, bm: int | None = None,
+              bk: int | None = None,
+              interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Nearest-prototype assignment; same contract as ``ref.vq_assign_ref``."""
     interpret = _interpret_default() if interpret is None else interpret
+    bm, bk = _tiles(z, w, bm, bk, "assign")
+    return _vq_assign(z, w, bm=bm, bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def _vq_delta(z, w, *, bm: int, interpret: bool):
     batch = z.shape[0]
-    bm_ = min(bm, max(8, batch))
+    bm_ = min(bm, max(_bm_floor(interpret), batch))
     zp = _pad_rows(z, bm_)
     counts, zsum, _ = _k.vq_delta_pallas(zp, w, bm=bm_, n_valid=batch,
                                          interpret=interpret)
     return counts, zsum
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def distortion(z: jax.Array, w: jax.Array, *, bm: int = 128,
-               interpret: bool | None = None) -> jax.Array:
-    """Mean min-distance (paper eq. 2 per worker) via the fused kernel."""
+def vq_delta(z: jax.Array, w: jax.Array, *, bm: int | None = None,
+             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Fused minibatch displacement stats; contract of ``ref.vq_delta_ref``."""
     interpret = _interpret_default() if interpret is None else interpret
+    if bm is None:      # explicit bm skips the tuner entirely (bk is unused
+        bm, _ = _tiles(z, w, None, None, "delta")  # here, so no resolution)
+    return _vq_delta(z, w, bm=bm, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def _distortion(z, w, *, bm: int, interpret: bool):
     batch = z.shape[0]
-    bm_ = min(bm, max(8, batch))
+    bm_ = min(bm, max(_bm_floor(interpret), batch))
     zp = _pad_rows(z, bm_)
     _, _, mind = _k.vq_delta_pallas(zp, w, bm=bm_, n_valid=batch,
                                     interpret=interpret)
     return jnp.sum(mind) / batch
+
+
+def distortion(z: jax.Array, w: jax.Array, *, bm: int | None = None,
+               interpret: bool | None = None) -> jax.Array:
+    """Mean min-distance (paper eq. 2 per worker) via the fused kernel."""
+    interpret = _interpret_default() if interpret is None else interpret
+    if bm is None:
+        bm, _ = _tiles(z, w, None, None, "delta")
+    return _distortion(z, w, bm=bm, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
@@ -111,9 +184,9 @@ def _delta_via_assign(z: jax.Array, w: jax.Array, *, bm: int, bk: int,
                       interpret: bool | None) -> tuple[jax.Array, jax.Array]:
     """(counts, zsum) through the blocked assignment kernel + a segment sum.
 
-    The blocked ``vq_assign`` kernel streams the codebook in (bk, d) tiles, so
-    it works for ANY kappa*d; the scatter-add back to (kappa, d) happens in
-    XLA (HBM-resident accumulators) instead of the fused kernel's VMEM ones.
+    The pre-fusion blocked route: the assignments round-trip through HBM and
+    the scatter-add back to (kappa, d) happens in XLA.  Kept as the
+    ``fused=False`` comparator the engine benchmark gates against.
     """
     assign, _ = vq_assign(z, w, bm=bm, bk=bk, interpret=interpret)
     kappa, d = w.shape
@@ -123,26 +196,113 @@ def _delta_via_assign(z: jax.Array, w: jax.Array, *, bm: int, bk: int,
     return counts, zsum
 
 
-def vq_delta_routed(z: jax.Array, w: jax.Array, *, bm: int = 128,
-                    bk: int = 128, budget_bytes: int | None = None,
-                    interpret: bool | None = None
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "with_delta",
+                                             "interpret"))
+def _vq_delta_blocked(z, w, residual, *, bm: int, bk: int, with_delta: bool,
+                      interpret: bool):
+    batch, d = z.shape
+    kappa = w.shape[0]
+    bm_ = min(bm, max(_bm_floor(interpret), batch))
+    zp = _pad_rows(z, bm_)
+    wp = _pad_rows(w, bk)
+    bk_ = min(bk, wp.shape[0])
+    if with_delta:
+        rp = _pad_rows(residual.astype(jnp.float32), bk)
+        _, _, counts, zsum, delta = _f.vq_delta_blocked_pallas(
+            zp, wp, bm=bm_, bk=bk_, n_valid=batch, kappa_valid=kappa,
+            residual=rp, interpret=interpret)
+        return counts[:kappa], zsum[:kappa], delta[:kappa]
+    _, _, counts, zsum = _f.vq_delta_blocked_pallas(
+        zp, wp, bm=bm_, bk=bk_, n_valid=batch, kappa_valid=kappa,
+        interpret=interpret)
+    return counts[:kappa], zsum[:kappa]
+
+
+def vq_delta_blocked(z: jax.Array, w: jax.Array, *, bm: int | None = None,
+                     bk: int | None = None, residual: jax.Array | None = None,
+                     interpret: bool | None = None):
+    """Fused blocked assign+delta (one dispatch, any ``kappa*d``).
+
+    Returns ``(counts, zsum)``; with ``residual`` given, also the in-VMEM
+    displacement epilogue ``counts[:, None]*w - zsum + residual``.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    bm, bk = _tiles(z, w, bm, bk, "delta_blocked")
+    return _vq_delta_blocked(z, w, residual, bm=bm, bk=bk,
+                             with_delta=residual is not None,
+                             interpret=interpret)
+
+
+def vq_delta_routed(z: jax.Array, w: jax.Array, *, bm: int | None = None,
+                    bk: int | None = None, budget_bytes: int | None = None,
+                    fused: bool = True, interpret: bool | None = None
                     ) -> tuple[jax.Array, jax.Array]:
     """``vq_delta`` with VMEM-aware routing (same contract as ``vq_delta``).
 
-    When the codebook fits the VMEM budget, the fused full-codebook kernel
-    runs; when ``kappa*d`` is too large, the blocked ``vq_assign`` kernel +
-    an XLA segment sum computes the identical (counts, zsum).
+    When the codebook fits the VMEM budget, the full-codebook kernel runs;
+    when ``kappa*d`` is too large, the fused blocked assign+delta kernel
+    keeps everything in one dispatch (``fused=False`` falls back to the
+    pre-fusion blocked assign + XLA segment sum).
     """
     kappa, d = w.shape
+    bm, bk = _tiles(z, w, bm, bk, "delta", budget_bytes=budget_bytes)
     if delta_fits_vmem(kappa, d, bm=min(bm, max(8, z.shape[0])),
                        budget_bytes=budget_bytes):
         return vq_delta(z, w, bm=bm, interpret=interpret)
+    if fused:
+        return vq_delta_blocked(z, w, bm=bm, bk=bk, interpret=interpret)
     return _delta_via_assign(z, w, bm=bm, bk=bk, interpret=interpret)
 
 
+def vq_window(zwin: jax.Array, w0: jax.Array, eps: jax.Array, *,
+              interpret: bool | None = None) -> jax.Array:
+    """One fused window: tau sequential eq.-1 steps in a single dispatch.
+
+    Bit-identical to scanning ``vq_delta_routed`` + the eq.-8 update over
+    the rows of ``zwin`` (the engine gates this).  Callers check
+    ``window_fits_vmem`` first — the codebook stays resident throughout.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    return _f.vq_window_pallas(zwin, w0, eps, interpret=interpret)
+
+
+def vq_delta_topk(z: jax.Array, w: jax.Array, residual: jax.Array, *,
+                  frac: float, bm: int | None = None, bk: int | None = None,
+                  budget_bytes: int | None = None,
+                  interpret: bool | None = None):
+    """Fused displacement + top-k compression for the sparse transport.
+
+    Computes the eq.-8 displacement with the error-feedback carry folded in
+    (``counts*w - zsum + residual``) and compresses it to the transport's
+    wire payload — ``(vals (k,), idx (k,) i32, new_residual (kappa, d))``,
+    exactly what ``comm.sparse.sparse_allsum`` derives pre-gather, with
+    ``k = max(1, int(frac * kappa * d))`` (the shared convention).  In the
+    blocked regime the displacement never leaves VMEM before selection.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    kappa, d = w.shape
+    bm, bk = _tiles(z, w, bm, bk, "delta", budget_bytes=budget_bytes)
+    if delta_fits_vmem(kappa, d, bm=min(bm, max(8, z.shape[0])),
+                       budget_bytes=budget_bytes):
+        counts, zsum = vq_delta(z, w, bm=bm, interpret=interpret)
+        full = (counts[:, None] * w.astype(jnp.float32) - zsum
+                + residual.astype(jnp.float32))
+    else:
+        _, _, full = vq_delta_blocked(z, w, bm=bm, bk=bk, residual=residual,
+                                      interpret=interpret)
+    k = max(1, int(frac * kappa * d))
+    return _f.vq_topk_pallas(full, k, interpret=interpret)
+
+
 def vq_minibatch_step(z: jax.Array, w: jax.Array, eps: jax.Array,
-                      *, interpret: bool | None = None) -> jax.Array:
-    """One fused minibatch VQ update: w <- w - (eps/|B|) * (counts*w - zsum)."""
-    counts, zsum = vq_delta(z, w, interpret=interpret)
+                      *, budget_bytes: int | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """One fused minibatch VQ update: w <- w - (eps/|B|) * (counts*w - zsum).
+
+    Routed through ``vq_delta_routed`` so large-kappa codebooks take the
+    blocked kernel instead of blowing the full-codebook VMEM plan.
+    """
+    counts, zsum = vq_delta_routed(z, w, budget_bytes=budget_bytes,
+                                   interpret=interpret)
     delta = counts[:, None] * w.astype(jnp.float32) - zsum
     return (w.astype(jnp.float32) - (eps / z.shape[0]) * delta).astype(w.dtype)

@@ -49,10 +49,12 @@ def _assign_kernel(z_ref, w_ref, z2_ref, w2_ref, assign_ref, mind_ref,
 
     z = z_ref[...].astype(jnp.float32)
     w = w_ref[...].astype(jnp.float32)
-    # (bm, bk) distances for this codebook block — MXU matmul + rank-1 terms
-    d2 = z2_ref[...] - 2.0 * jax.lax.dot_general(
-        z, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) + w2_ref[...]
+    # (bm, bk) distances for this codebook block — MXU matmul + rank-1 terms.
+    # The cross term is spelled ``z @ w.T`` (not a dim-1/dim-1 dot_general):
+    # XLA:CPU accumulates the two contractions in different orders, and the
+    # engine's bitwise fused-vs-scan gate needs the SAME rounding as the
+    # ``core.vq.squared_distances`` oracle, which writes ``z @ w.T``.
+    d2 = z2_ref[...] - 2.0 * (z @ w.T) + w2_ref[...]
 
     # mask out padded codebook rows (global kappa index >= kappa_valid)
     col = j * bk + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
@@ -121,9 +123,9 @@ def _delta_kernel(z_ref, w_ref, counts_ref, zsum_ref, mind_ref,
     w = w_ref[...].astype(jnp.float32)           # (kappa, d)
     z2 = jnp.sum(z * z, axis=1, keepdims=True)
     w2 = jnp.sum(w * w, axis=1)[None, :]
-    d2 = z2 - 2.0 * jax.lax.dot_general(
-        z, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) + w2                                       # (bm, kappa)
+    # ``z @ w.T`` (not a dim-1/dim-1 dot_general) — rounds exactly like the
+    # ``core.vq.squared_distances`` oracle; see the note in ``_assign_kernel``
+    d2 = z2 - 2.0 * (z @ w.T) + w2               # (bm, kappa)
 
     row = i * bm + jax.lax.broadcasted_iota(jnp.int32, (z.shape[0], 1), 0)
     valid = row < n_valid                         # (bm, 1)

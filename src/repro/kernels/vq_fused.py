@@ -1,0 +1,298 @@
+"""Fused Pallas kernels for the VQ hot path — one dispatch, no round trips.
+
+Two fusions on top of the ``vq_assign.py`` pair:
+
+  * ``vq_delta_blocked_pallas`` — assignment + delta accumulation (counts,
+    zsum, min-dist) in ONE Pallas dispatch for the blocked (``kappa*d`` >
+    VMEM) regime.  The pre-fusion route (``ops._delta_via_assign``) ran the
+    blocked assign kernel, round-tripped the assignments through HBM, and
+    scatter-added in XLA; here the grid is ``(2*kappa_blocks,
+    batch_blocks)`` with the batch axis minor — an outer *distance* sweep
+    (j < K) streams codebook blocks and keeps the running (min, argmin)
+    for the WHOLE batch in two VMEM-resident ``(batch, 1)`` outputs, then
+    an outer *accumulate* sweep (j >= K) re-streams each codebook block and
+    folds every batch block's one-hot contribution into that block's
+    (counts, zsum) — output revisits stay consecutive, so the accumulators
+    live in VMEM until their single flush.  An optional epilogue forms the
+    eq.-8 displacement ``counts*w - zsum + residual`` in VMEM on each
+    codebook block's last visit, so the sparse transport's top-k selection
+    reads the finished payload instead of re-deriving it from two HBM
+    arrays.
+
+  * ``vq_window_pallas`` — the engine's inner loop: ``tau`` SEQUENTIAL
+    eq.-1 steps (batch of one point each) fused into one dispatch with the
+    codebook resident in VMEM for the whole window.  Each step runs the
+    same float ops as the per-step path (d2 via MXU contraction, strict
+    argmin, ``w - eps*(counts*w - zsum)``) on single-row operands, so the
+    fused window is bit-identical to the per-step scan it replaces — every
+    per-row reduction and product is independent of the seven padding rows
+    the unfused kernel carries.  That bit-stability is gated by the engine
+    benchmark's fused-vs-unfused records.
+
+Block sizes come from ``kernels.autotune``; shapes are padded by ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.vq_assign import BIG
+
+
+def _fused_delta_kernel(z_ref, w_ref, *refs, bm: int, bk: int, kb: int,
+                        n_valid: int, kappa_valid: int, with_delta: bool):
+    """Grid = (2*kb, batch_blocks); batch is the minor axis.
+
+    Outer steps j < kb:   distance sweep — codebook block j vs batch block
+                          i, running (min, argmin) updated in the resident
+                          (batch, 1) outputs.
+    Outer steps j >= kb:  accumulate sweep — codebook block j-kb gathers
+                          counts/zsum from every batch block i (consecutive
+                          revisits of one (bk, ·) output block), plus the
+                          optional in-VMEM delta epilogue at i == last.
+    """
+    if with_delta:
+        res_ref, assign_ref, mind_ref, counts_ref, zsum_ref, delta_ref = refs
+    else:
+        res_ref = delta_ref = None
+        assign_ref, mind_ref, counts_ref, zsum_ref = refs
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(jnp.logical_and(j == 0, i == 0))
+    def _init_running():
+        # the (batch, 1) min/arg outputs have constant index maps: one
+        # block covering the whole array, resident for the entire grid
+        mind_ref[...] = jnp.full_like(mind_ref, BIG)
+        assign_ref[...] = jnp.zeros_like(assign_ref)
+
+    rows = pl.ds(i * bm, bm)
+
+    @pl.when(j < kb)
+    def _distance_sweep():
+        z = z_ref[...].astype(jnp.float32)           # (bm, d)
+        w = w_ref[...].astype(jnp.float32)           # (bk, d)
+        z2 = jnp.sum(z * z, axis=1, keepdims=True)
+        w2 = jnp.sum(w * w, axis=1)[None, :]
+        # ``z @ w.T`` rounds like the ``squared_distances`` oracle (see
+        # the note in ``vq_assign._assign_kernel``)
+        d2 = z2 - 2.0 * (z @ w.T) + w2                # (bm, bk)
+        col = j * bk + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+        d2 = jnp.where(col < kappa_valid, d2, BIG)
+        blk_arg = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None]
+        blk_min = jnp.min(d2, axis=1)[:, None]
+        cur_min = mind_ref[rows, :]
+        cur_arg = assign_ref[rows, :]
+        better = blk_min < cur_min
+        mind_ref[rows, :] = jnp.where(better, blk_min, cur_min)
+        assign_ref[rows, :] = jnp.where(better, j * bk + blk_arg, cur_arg)
+
+    @pl.when(j >= kb)
+    def _accumulate_sweep():
+        @pl.when(i == 0)
+        def _zero_block():
+            counts_ref[...] = jnp.zeros_like(counts_ref)
+            zsum_ref[...] = jnp.zeros_like(zsum_ref)
+
+        z = z_ref[...].astype(jnp.float32)           # (bm, d)
+        arg = assign_ref[rows, :]                     # (bm, 1) final argmin
+        row = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+        valid = row < n_valid
+        local = arg - (j - kb) * bk                   # block-local code id
+        onehot = (local == jax.lax.broadcasted_iota(
+            jnp.int32, (bm, bk), 1)).astype(jnp.float32)
+        onehot = jnp.where(valid, onehot, 0.0)
+        counts_ref[...] += jnp.sum(onehot, axis=0)[:, None]
+        # (bk, bm) x (bm, d) scatter-add as an MXU matmul
+        zsum_ref[...] += jax.lax.dot_general(
+            onehot, z, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        if with_delta:
+            @pl.when(i == nb - 1)
+            def _delta_epilogue():
+                # eq.-8 displacement + error-feedback carry, formed in VMEM
+                # on this codebook block's LAST visit — the top-k selection
+                # downstream reads a finished payload
+                w = w_ref[...].astype(jnp.float32)
+                delta_ref[...] = (counts_ref[...] * w - zsum_ref[...]
+                                  + res_ref[...])
+
+
+def vq_delta_blocked_pallas(z: jax.Array, w: jax.Array, *, bm: int, bk: int,
+                            n_valid: int | None = None,
+                            kappa_valid: int | None = None,
+                            residual: jax.Array | None = None,
+                            interpret: bool = False):
+    """Fused blocked assign+delta: one dispatch for any ``kappa * d``.
+
+    (batch, d), (kappa, d) -> (assign (batch,) i32, mind (batch,) f32,
+    counts (kappa,) f32, zsum (kappa, d) f32[, delta (kappa, d) f32]).
+    ``batch % bm == 0`` and ``kappa % bk == 0`` required (``ops.py`` pads).
+    The residency plan holds only ``O(bm*d + bk*d + bm*bk + batch)`` bytes
+    — never the full codebook — which is what ``ops.delta_vmem_bytes(...,
+    bk=...)`` budgets.
+    """
+    batch, d = z.shape
+    kappa, _ = w.shape
+    n_valid = batch if n_valid is None else n_valid
+    kappa_valid = kappa if kappa_valid is None else kappa_valid
+    kb = kappa // bk
+    with_delta = residual is not None
+
+    grid = (2 * kb, batch // bm)
+    in_specs = [
+        pl.BlockSpec((bm, d), lambda j, i: (i, 0)),
+        pl.BlockSpec((bk, d), lambda j, i: (j % kb, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((batch, 1), lambda j, i: (0, 0)),
+        pl.BlockSpec((batch, 1), lambda j, i: (0, 0)),
+        pl.BlockSpec((bk, 1), lambda j, i: (jnp.maximum(j - kb, 0), 0)),
+        pl.BlockSpec((bk, d), lambda j, i: (jnp.maximum(j - kb, 0), 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        jax.ShapeDtypeStruct((batch, 1), jnp.float32),
+        jax.ShapeDtypeStruct((kappa, 1), jnp.float32),
+        jax.ShapeDtypeStruct((kappa, d), jnp.float32),
+    ]
+    inputs = (z, w)
+    if with_delta:
+        in_specs.append(
+            pl.BlockSpec((bk, d), lambda j, i: (jnp.maximum(j - kb, 0), 0)))
+        out_specs.append(
+            pl.BlockSpec((bk, d), lambda j, i: (jnp.maximum(j - kb, 0), 0)))
+        out_shape.append(jax.ShapeDtypeStruct((kappa, d), jnp.float32))
+        inputs += (residual.astype(jnp.float32),)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_delta_kernel, bm=bm, bk=bk, kb=kb,
+                          n_valid=n_valid, kappa_valid=kappa_valid,
+                          with_delta=with_delta),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+    if with_delta:
+        assign, mind, counts, zsum, delta = out
+        return assign[:, 0], mind[:, 0], counts[:, 0], zsum, delta
+    assign, mind, counts, zsum = out
+    return assign[:, 0], mind[:, 0], counts[:, 0], zsum
+
+
+def _topk_kernel(full_ref, vals_ref, idx_ref, res_ref, *, k: int):
+    """Top-k delta compression: the ``sparse_allsum`` per-leaf selection
+    (k largest-|.| entries, error-feedback residual) applied in VMEM to a
+    finished ``(kappa, d)`` displacement, so the sparse transport's wire
+    payload (vals, idx) leaves the kernel directly."""
+    full = full_ref[...].astype(jnp.float32)
+    flat = full.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    kept = jnp.zeros_like(flat).at[idx].set(vals)
+    vals_ref[...] = vals[None, :]
+    idx_ref[...] = idx.astype(jnp.int32)[None, :]
+    res_ref[...] = (flat - kept).reshape(full.shape)
+
+
+def vq_topk_pallas(full: jax.Array, k: int, *, interpret: bool = False):
+    """(kappa, d) -> (vals (k,), idx (k,) i32, new_residual (kappa, d)).
+
+    Matches ``comm.sparse.sparse_allsum``'s pre-gather compute bit-for-bit:
+    same ``lax.top_k`` tie order, same scatter/subtract error feedback.
+    """
+    kappa, d = full.shape
+    vals, idx, res = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((kappa, d), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((kappa, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((kappa, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(full)
+    return vals[0], idx[0], res
+
+
+def _window_kernel(z_ref, w0_ref, eps_ref, wout_ref, *, tau: int):
+    """One fused window: tau sequential eq.-1 steps, codebook VMEM-resident.
+
+    z_ref:   (tau, d)    the window's point stream
+    w0_ref:  (kappa, d)  prototypes entering the window
+    eps_ref: (tau, 1)    precomputed Robbins-Monro steps (f32)
+    wout_ref:(kappa, d)  prototypes after the window
+
+    Bitwise equality with the per-step scan is load-bearing (the engine CI
+    gate and the mesh-vs-oracle tier-1 pins both ride on it), and two
+    compilation artifacts can silently break it:
+
+      * SHAPES: XLA's reduction/matmul emission is shape-dependent, so the
+        distance ops here must see the SAME shapes as ``_delta_kernel``
+        does on the per-step path.  On the interpret backend ``ops.py``
+        clamps the batch-of-one block to one row (no MXU to align for), so
+        each step here computes z2/dot/argmin on the matching (1, d)
+        row, and the cross term is spelled ``z @ w.T`` exactly as
+        ``core.vq.squared_distances`` writes it — a dim-1/dim-1
+        ``dot_general`` accumulates in a different order on XLA:CPU and
+        flips near-tie argmins (observed gap: ~2e-7 on unit-scale data).
+      * FMA CONTRACTION: the update is left as the plain ``w - eps*h``
+        the scan body writes — LLVM contracts BOTH loop contexts into the
+        same fma.  Do not "improve" the rounding here (e.g. forcing the
+        product to round first): eagerly-executed one-step programs round
+        differently from either loop, and matching those breaks the
+        jitted-scan equality that actually matters.
+    """
+    kappa = w0_ref.shape[0]
+    zwin = z_ref[...].astype(jnp.float32)            # (tau, d)
+    eps_all = eps_ref[...]                           # (tau, 1)
+
+    def step(t, w):
+        z = jax.lax.dynamic_slice_in_dim(zwin, t, 1, 0)          # (1, d)
+        z2 = jnp.sum(z * z, axis=1, keepdims=True)               # (1, 1)
+        w2 = jnp.sum(w * w, axis=1)[None, :]
+        d2 = z2 - 2.0 * (z @ w.T) + w2                           # (1, kappa)
+        arg = jnp.argmin(d2, axis=1)                             # (1,)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (kappa, 1), 0)
+                  == arg[0]).astype(jnp.float32)                 # (kappa, 1)
+        zsum = onehot * z                                        # (kappa, d)
+        h = onehot * w - zsum
+        eps = jax.lax.dynamic_slice_in_dim(eps_all, t, 1, 0)[0, 0]
+        return w - eps * h
+
+    wout_ref[...] = jax.lax.fori_loop(
+        0, tau, step, w0_ref[...].astype(jnp.float32))
+
+
+def vq_window_pallas(zwin: jax.Array, w0: jax.Array, eps: jax.Array, *,
+                     interpret: bool = False) -> jax.Array:
+    """(tau, d), (kappa, d), (tau,) -> w after tau fused sequential steps."""
+    tau, d = zwin.shape
+    kappa, _ = w0.shape
+    return pl.pallas_call(
+        functools.partial(_window_kernel, tau=tau),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((tau, d), lambda i: (0, 0)),
+            pl.BlockSpec((kappa, d), lambda i: (0, 0)),
+            pl.BlockSpec((tau, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((kappa, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kappa, d), jnp.float32),
+        interpret=interpret,
+    )(zwin, w0.astype(jnp.float32),
+      eps.reshape(tau, 1).astype(jnp.float32))

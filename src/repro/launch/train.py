@@ -391,8 +391,24 @@ def main(argv=None) -> int:
                          "collective bytes, and the host residual; prints "
                          "the attribution table and writes the Profiler "
                          "export (render with repro.obs.report --profile)")
+    ap.add_argument("--autotune", choices=("off", "cache", "search"),
+                    default="cache",
+                    help="Pallas tile selection: 'off' pins the legacy "
+                         "(128, 128) tiles, 'cache' picks per shape from "
+                         "the roofline model (memoized), 'search' also "
+                         "times the top model candidates and keeps the "
+                         "fastest")
+    ap.add_argument("--autotune-cache", default="", metavar="TILES.json",
+                    help="persist tuned tile configs to this JSON file "
+                         "(also read at startup; keyed by shape AND device "
+                         "kind, so a cache never leaks across accelerators)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    from repro.kernels import autotune
+    autotune.set_mode(args.autotune)
+    if args.autotune_cache:
+        autotune.set_cache_path(args.autotune_cache)
 
     if args.mode == "vq":
         return run_vq(args)

@@ -45,12 +45,13 @@ class ShardedLookup:
                    one of 'direct' / 'shard_batch' / 'shard_kappa'.
     budget_bytes:  VMEM budget for the auto routing (None = ops default /
                    ``REPRO_VMEM_BUDGET_BYTES``).
-    bm, bk:        kernel block sizes (MXU-aligned 128s).
+    bm, bk:        kernel block sizes; None (default) defers to the
+                   ``kernels.autotune`` roofline pick for each shard shape.
     """
 
     def __init__(self, n_devices: int | None = None, axis: str = "shards", *,
                  mode: str = "auto", budget_bytes: int | None = None,
-                 bm: int = 128, bk: int = 128):
+                 bm: int | None = None, bk: int | None = None):
         if mode not in MODES:
             raise ValueError(f"unknown lookup mode {mode!r}; "
                              f"choose from {MODES}")

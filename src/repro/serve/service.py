@@ -3,13 +3,13 @@
 The serving analogue of the paper's cloud regime: queries arrive one vector
 at a time (slow, unpredictable network), but the hardware wants MXU-aligned
 batches.  A micro-batching scheduler coalesces incoming requests into one
-lookup call — padded to a multiple of ``bm=128`` rows — under a
+lookup call — padded to a multiple of ``batch_align=128`` rows — under a
 deadline-driven flush:
 
     submit(z) ──► pending queue ──► flush when EITHER
                                       * coalesced rows >= max_batch, OR
                                       * oldest request age >= max_delay_s
-                  ──► pad to bm ──► ShardedLookup.assign(batch, snapshot.w)
+                  ──► pad to batch_align ──► ShardedLookup.assign(batch, w)
                   ──► split results back onto per-request futures
 
 Every flush reads ONE immutable ``CodebookStore`` snapshot, so all rows of
@@ -81,11 +81,14 @@ class QuantizeService:
     store:       the ``CodebookStore`` serving reads (hot-swappable).
     lookup:      a ``ShardedLookup`` (default: one over all devices).
     max_batch:   flush as soon as this many rows are pending (default:
-                 ``bm`` rows per lookup shard — one MXU block per device).
+                 ``batch_align`` rows per lookup shard — one MXU block per
+                 device).
     max_delay_s: flush a partial batch once the oldest pending request has
                  waited this long (the latency bound batching may add).
-    bm:          MXU row alignment for the coalesced batch.
-    warmup:      compile the two hot flush shapes (one ``bm`` block and a
+    batch_align: MXU row alignment for the coalesced batch (NOT a kernel
+                 tile size — the lookup's Pallas tiles come from
+                 ``kernels.autotune``).
+    warmup:      compile the two hot flush shapes (one aligned block and a
                  full ``max_batch``) against the current codebook inside
                  ``start()`` — otherwise the FIRST flush pays the lookup
                  compile and every request queued behind it eats it as
@@ -94,21 +97,21 @@ class QuantizeService:
 
     def __init__(self, store: CodebookStore, lookup: ShardedLookup | None = None,
                  *, max_batch: int | None = None, max_delay_s: float = 2e-3,
-                 bm: int = 128, warmup: bool = True,
+                 batch_align: int = 128, warmup: bool = True,
                  tracer: Tracer | None = None,
                  metrics: MetricsRegistry | None = None):
         self.store = store
         self.lookup = lookup if lookup is not None else ShardedLookup()
-        if bm < 1:
-            raise ValueError(f"bm must be >= 1, got {bm}")
-        if bm % self.lookup.batch_multiple():
+        if batch_align < 1:
+            raise ValueError(f"batch_align must be >= 1, got {batch_align}")
+        if batch_align % self.lookup.batch_multiple():
             raise ValueError(
-                f"bm={bm} must be a multiple of the lookup's "
-                f"{self.lookup.batch_multiple()} shards so padded batches "
-                f"land one aligned block per device")
-        self.bm = bm
+                f"batch_align={batch_align} must be a multiple of the "
+                f"lookup's {self.lookup.batch_multiple()} shards so padded "
+                f"batches land one aligned block per device")
+        self.batch_align = batch_align
         self.max_batch = max_batch if max_batch is not None else (
-            bm * self.lookup.n_shards)
+            batch_align * self.lookup.n_shards)
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if max_delay_s < 0:
@@ -136,8 +139,8 @@ class QuantizeService:
         if self.warmup and self.store.version:
             snap = self.store.latest()
             d = snap.w.shape[1]
-            for rows in sorted({self.bm, -(-self.max_batch // self.bm)
-                                * self.bm}):
+            align = self.batch_align
+            for rows in sorted({align, -(-self.max_batch // align) * align}):
                 jax.block_until_ready(self.lookup.assign(
                     np.zeros((rows, d), np.float32), snap.w))
         self._thread = threading.Thread(target=self._flush_loop,
@@ -238,7 +241,7 @@ class QuantizeService:
                 snap = self.store.latest()
                 z = (batch[0].z if len(batch) == 1
                      else np.concatenate([r.z for r in batch]))
-                pad = (-z.shape[0]) % self.bm
+                pad = (-z.shape[0]) % self.batch_align
                 if pad:
                     z = np.concatenate([z, np.zeros((pad, z.shape[1]),
                                                     np.float32)])

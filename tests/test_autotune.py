@@ -1,0 +1,199 @@
+"""Autotuner determinism + fused-kernel parity on ragged shapes.
+
+Three contracts pinned here:
+
+  * every kernel route (full-codebook, fused blocked, unfused comparator,
+    autotuned default) matches the pure-jnp oracle on shapes that do NOT
+    divide the tiles — batch not a multiple of bm, kappa not a multiple of
+    bk, kappa < bk, batch < 8;
+  * the tuner is deterministic: same shape => same config, a cache hit
+    never re-searches, and the JSON file cache round-trips;
+  * no module outside ``src/repro/kernels/`` passes literal tile sizes —
+    tiles come from ``kernels.autotune`` or an explicit caller override,
+    never from scattered hardcoded constants.
+"""
+
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.sparse import topk_count
+from repro.core import vq
+from repro.kernels import autotune, ops, ref
+
+KEY = jax.random.PRNGKey(11)
+
+# batch % bm != 0, kappa % bk != 0, kappa < bk, batch < 8 — all the ways a
+# shape can disagree with a tile
+RAGGED = [(100, 200, 16), (64, 300, 8), (7, 33, 5), (3, 4, 2), (130, 17, 3)]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tuner():
+    """Each test sees a clean in-memory tuner and leaves one behind."""
+    autotune.set_cache_path(None)
+    autotune.reset("cache")
+    yield
+    autotune.set_cache_path(None)
+    autotune.reset("cache")
+
+
+def _case(batch, kappa, d):
+    kz, kw = jax.random.split(jax.random.fold_in(KEY, batch * kappa + d))
+    z = jax.random.normal(kz, (batch, d))
+    w = jax.random.normal(kw, (kappa, d))
+    return z, w
+
+
+# -- ragged-shape parity: every route vs the oracle -------------------------
+
+@pytest.mark.parametrize("batch,kappa,d", RAGGED)
+def test_all_delta_routes_match_ref_on_ragged_shapes(batch, kappa, d):
+    z, w = _case(batch, kappa, d)
+    cr, sr = ref.vq_delta_ref(z, w)
+    routes = {
+        "full": {},                                   # fits-VMEM kernel
+        "blocked_tuned": {"budget_bytes": 1024},      # fused, tuner tiles
+        "blocked_forced": {"budget_bytes": 1024, "bm": 16, "bk": 128},
+        "unfused": {"budget_bytes": 1024, "fused": False},
+    }
+    for name, kwargs in routes.items():
+        c, s = ops.vq_delta_routed(z, w, **kwargs)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(cr),
+                                   atol=1e-5, err_msg=name)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("batch,kappa,d", RAGGED[:3])
+def test_vq_assign_autotuned_matches_ref(batch, kappa, d):
+    z, w = _case(batch, kappa, d)
+    a, m = ops.vq_assign(z, w)                        # tiles from the tuner
+    ar, mr = ref.vq_assign_ref(z, w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ar))
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_window_kernel_bitwise_matches_per_step_scan():
+    tau, kappa, d = 12, 16, 8
+    kz, kw = jax.random.split(jax.random.fold_in(KEY, 99))
+    zwin = jax.random.normal(kz, (tau, d))
+    w0 = jax.random.normal(kw, (kappa, d))
+    eps = vq.default_steps(1 + jnp.arange(tau, dtype=jnp.int32))
+    w_fused = ops.vq_window(zwin, w0, eps)
+
+    # the engine's pre-fusion per-step path, verbatim (mesh._local_window's
+    # scan body) — the fused kernel replays these float ops exactly
+    def scan_oracle(zwin, w0, eps):
+        def body(w, ze):
+            z, e = ze
+            counts, zsum = ops.vq_delta(z[None, :], w)
+            h = counts[:, None] * w - zsum
+            return w - e * h, None
+        return jax.lax.scan(body, w0, (zwin, eps))[0]
+
+    w_ref = jax.jit(scan_oracle)(zwin, w0, eps)
+    # fusion trades dispatches, not math: BITWISE equality, not allclose
+    assert np.array_equal(np.asarray(w_fused), np.asarray(w_ref))
+
+
+@pytest.mark.parametrize("budget", [None, 1024])
+def test_vq_delta_topk_matches_sparse_transport_semantics(budget):
+    batch, kappa, d, frac = 40, 24, 6, 0.1
+    z, w = _case(batch, kappa, d)
+    residual = jax.random.normal(jax.random.fold_in(KEY, 5), (kappa, d))
+    vals, idx, new_res = ops.vq_delta_topk(z, w, residual, frac=frac,
+                                           budget_bytes=budget)
+    # oracle mirrors comm.sparse.sparse_allsum's per-leaf compress
+    cr, sr = ref.vq_delta_ref(z, w)
+    full = (np.asarray(cr)[:, None] * np.asarray(w, np.float32)
+            - np.asarray(sr) + np.asarray(residual, np.float32))
+    flat = full.reshape(-1)
+    k = topk_count(kappa * d, frac)
+    assert vals.shape == (k,) and idx.shape == (k,)
+    order = np.argsort(-np.abs(flat), kind="stable")[:k]
+    np.testing.assert_array_equal(np.sort(np.asarray(idx)), np.sort(order))
+    np.testing.assert_allclose(np.asarray(vals),
+                               flat[np.asarray(idx)], rtol=1e-4, atol=1e-4)
+    kept = np.zeros_like(flat)
+    kept[np.asarray(idx)] = flat[np.asarray(idx)]
+    np.testing.assert_allclose(np.asarray(new_res).reshape(-1), flat - kept,
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- tuner determinism ------------------------------------------------------
+
+def test_same_shape_same_config_and_cache_hit_never_researches():
+    c1 = autotune.pick_tiles(100, 200, 16)
+    assert autotune.search_count() == 1
+    c2 = autotune.pick_tiles(100, 200, 16)
+    assert c1 == c2
+    assert autotune.search_count() == 1          # hit: zero re-search
+    # the pick must be feasible under the SAME formula the router uses
+    assert ops.delta_vmem_bytes(200, 16, bm=c1.bm, bk=c1.bk) \
+        <= ops.vmem_budget_bytes(None)
+    # a different shape is a different key, not a collision
+    c3 = autotune.pick_tiles(64, 300, 8)
+    assert autotune.search_count() == 2
+    assert autotune.tune_key("delta", 100, 200, 16) \
+        != autotune.tune_key("delta", 64, 300, 8)
+
+
+def test_off_mode_returns_legacy_tiles_without_caching():
+    autotune.reset("off")
+    cfg = autotune.pick_tiles(100, 200, 16)
+    assert (cfg.bm, cfg.bk) == autotune.DEFAULT_TILES
+    assert autotune.search_count() == 0
+
+
+def test_json_cache_round_trips(tmp_path):
+    path = tmp_path / "tiles.json"
+    autotune.set_cache_path(str(path))
+    autotune.reset("cache")
+    c1 = autotune.pick_tiles(100, 200, 16)
+    assert autotune.search_count() == 1
+    assert path.exists()
+    # a fresh process (reset) reloads the file: hit, zero re-search
+    autotune.reset("cache")
+    c2 = autotune.pick_tiles(100, 200, 16)
+    assert c1 == c2
+    assert autotune.search_count() == 0
+
+
+def test_search_mode_result_is_cached_and_feasible():
+    autotune.reset("search")
+    cfg = autotune.pick_tiles(16, 16, 4)
+    assert autotune.search_count() == 1
+    assert ops.delta_vmem_bytes(16, 4, bm=cfg.bm, bk=cfg.bk) \
+        <= ops.vmem_budget_bytes(None)
+    assert autotune.pick_tiles(16, 16, 4) == cfg
+    assert autotune.search_count() == 1          # measured once, cached
+
+
+def test_tune_key_is_device_scoped():
+    assert autotune.device_kind() in autotune.tune_key("delta", 8, 16, 4)
+
+
+# -- the tile-hygiene pin ---------------------------------------------------
+
+def test_no_literal_tile_sizes_outside_kernels():
+    """Tiles are the tuner's (or an explicit caller's) to choose: no module
+    outside ``src/repro/kernels/`` may pass literal ``bm=``/``bk=`` sizes."""
+    import repro
+    root = pathlib.Path(next(iter(repro.__path__)))
+    pat = re.compile(r"\b(bm|bk)\s*=\s*\d")
+    offenders = []
+    for p in sorted(root.rglob("*.py")):
+        if p.relative_to(root).parts[0] == "kernels":
+            continue
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{p.relative_to(root)}:{i}: {line.strip()}")
+    assert not offenders, (
+        "literal kernel tile sizes outside src/repro/kernels/ "
+        "(route through kernels.autotune instead):\n" + "\n".join(offenders))

@@ -221,7 +221,7 @@ def test_service_full_batch_flushes_before_deadline():
 def test_service_pads_to_mxu_alignment():
     store = CodebookStore(_codebook())
     svc = QuantizeService(store, ShardedLookup(n_devices=1),
-                          max_delay_s=1e-3, bm=128)
+                          max_delay_s=1e-3, batch_align=128)
     with svc:
         svc.quantize(_queries(3, fold=9))
     assert svc.stats.padded_rows == 125  # 3 -> one aligned 128 block
