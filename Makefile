@@ -15,6 +15,10 @@
 #   make bench-profile — roofline-attributed profiling: per-window cost
 #                        attribution of the three schemes on the 8-device
 #                        mesh -> BENCH_profile.json (the check_profile input)
+#   make bench-adapt   — adaptive-communication suite: {fixed,dynamic} merge x
+#                        {dense,bf16,int8} wire + the fixed-tau frontier legs
+#                        -> BENCH_adapt.json (the check_adapt gate input; runs
+#                        non-quick so the exact wire pins match the baseline)
 #   make perf-report   — render every committed BENCH_*.json baseline plus
 #                        attribution into a self-contained perf_report.html
 #   make serve-smoke   — quantization service end to end: live elastic trainer
@@ -36,8 +40,8 @@ export XLA_FLAGS ?= --xla_force_host_platform_device_count=8
 
 .PHONY: test lint bench-smoke bench-engine bench-elastic bench-serve \
         bench-comm bench-hier bench-obs bench-chaos bench-profile \
-        perf-report serve-smoke trace-smoke ci-local example-mesh \
-        example-elastic example-serve
+        bench-adapt perf-report serve-smoke trace-smoke ci-local \
+        example-mesh example-elastic example-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -77,6 +81,9 @@ bench-chaos:
 bench-profile:
 	$(PY) -m benchmarks.run --suite profile --quick
 
+bench-adapt:
+	$(PY) -m benchmarks.run --suite adapt
+
 perf-report:
 	$(PY) -m repro.obs.report --out perf_report.html
 
@@ -92,6 +99,11 @@ trace-smoke:
 		--trace ci.trace.json --metrics ci.metrics.jsonl
 	$(PY) -m repro.obs.check ci.trace.json --expect-merge-tiers 0,1 \
 		--expect-counter codebook_divergence --expect-counter distortion
+	$(PY) -m repro.launch.train --mode vq --executor mesh --scheme delta \
+		--workers 8 --points 400 --merge dynamic --divergence-thresh 1e-3 \
+		--wire-quant int8 --trace ci.adapt.trace.json
+	$(PY) -m repro.obs.check ci.adapt.trace.json \
+		--expect-counter divergence_trigger
 
 ci-local: lint
 	XLA_FLAGS=--xla_force_host_platform_device_count=1 $(PY) -m pytest -q
@@ -120,6 +132,9 @@ ci-local: lint
 	$(PY) -m benchmarks.run --suite profile --quick --out BENCH_profile.fresh.json
 	$(PY) -m benchmarks.check_regression \
 		--baseline BENCH_profile.json --fresh BENCH_profile.fresh.json
+	$(PY) -m benchmarks.run --suite adapt --out BENCH_adapt.fresh.json
+	$(PY) -m benchmarks.check_regression \
+		--baseline BENCH_adapt.json --fresh BENCH_adapt.fresh.json
 	$(PY) -m repro.obs.report --out perf_report.html
 	$(MAKE) trace-smoke
 	$(PY) -m benchmarks.run --suite elastic --quick --out BENCH_elastic.fresh.json

@@ -559,6 +559,125 @@ def check_hier(baseline: dict, fresh: dict, *,
     return ok and red_ok and par_ok, msgs + red_msgs + par_msgs
 
 
+def _adapt_cells(doc: dict) -> dict[tuple[str, str], dict]:
+    return {(r["merge"], r["quant"]): r
+            for r in doc.get("results", []) if r.get("kind") == "cell"}
+
+
+def check_adapt(baseline: dict, fresh: dict, *,
+                curve_rtol: float = 1e-2,
+                gates: list | None = None) -> tuple[bool, list[str]]:
+    """Adapt-suite gate; same contract as ``check``.
+
+    Wire bytes AND trigger counts are trace-exact on a seeded workload, so
+    every cell and fixed-tau leg must match the baseline EXACTLY — drift
+    means the trigger rule, the probe accounting, or a codec's wire
+    formula changed.  On top of the baseline pins, the fresh summary
+    record must clear the ISSUE's absolute bars: the thresh=0/quant-off
+    run bit-matches the plain delta merge, and the dynamic-dense and
+    dynamic-int8 cells land within ``curve_rtol`` of the best fixed-tau
+    leg's final distortion at STRICTLY fewer total wire bytes.
+    """
+    msgs: list[str] = []
+    ok = True
+    b_cells, f_cells = _adapt_cells(baseline), _adapt_cells(fresh)
+    missing = sorted(set(b_cells) - set(f_cells))
+    if missing:
+        raise ValueError(
+            f"fresh adapt run is missing baseline cells {missing} — the "
+            f"sweep lost coverage (regenerate the baseline only if the "
+            f"cell was removed on purpose)")
+    common = sorted(set(b_cells) & set(f_cells))
+    if not common:
+        raise ValueError("no (merge, quant) cells shared between baseline "
+                         "and fresh adapt output — regenerate with "
+                         "benchmarks.run --suite adapt")
+    drifted = 0
+    max_err = 0.0
+    for key in common:
+        b, f = b_cells[key], f_cells[key]
+        cfg = ("m", "n", "d", "kappa", "tau", "thresh", "max_stale")
+        if tuple(b.get(k) for k in cfg) != tuple(f.get(k) for k in cfg):
+            raise ValueError(
+                f"{key}: baseline config != fresh — regenerate the "
+                f"baseline (benchmarks.run --suite adapt) instead of "
+                f"comparing different runs")
+        pins = ("total_wire_bytes", "merge_wire_bytes", "probe_wire_bytes",
+                "n_triggered")
+        bad = [p for p in pins if b[p] != f[p]]
+        if bad:
+            ok = False
+            drifted += 1
+            msgs.append(
+                f"FAIL {key}: " + "; ".join(
+                    f"{p} drifted {b[p]} -> {f[p]}" for p in bad))
+        else:
+            msgs.append(
+                f"ok   {key}: wire {f['total_wire_bytes']} B, "
+                f"trig {f['n_triggered']}/{f['n_windows']} (exact)")
+        err = abs(f["final_C"] - b["final_C"]) / (abs(b["final_C"]) + 1e-12)
+        max_err = max(max_err, err)
+        if err > curve_rtol:
+            ok = False
+            msgs.append(f"FAIL {key}: final distortion diverged "
+                        f"(rel err {err:.2e} > {curve_rtol:.0e})")
+    _gate(gates, "adapt wire/trigger cells drifted", drifted, 0)
+    _gate(gates, "adapt final distortion max rel err", max_err, curve_rtol)
+
+    b_legs = {r["tau"]: r for r in baseline.get("results", [])
+              if r.get("kind") == "fixed_leg"}
+    f_legs = {r["tau"]: r for r in fresh.get("results", [])
+              if r.get("kind") == "fixed_leg"}
+    leg_drift = 0
+    for tau in sorted(set(b_legs) & set(f_legs)):
+        if b_legs[tau]["total_wire_bytes"] != f_legs[tau]["total_wire_bytes"]:
+            ok = False
+            leg_drift += 1
+            msgs.append(f"FAIL fixed tau={tau}: wire drifted "
+                        f"{b_legs[tau]['total_wire_bytes']} -> "
+                        f"{f_legs[tau]['total_wire_bytes']}")
+    _gate(gates, "adapt fixed-tau leg wire drifted", leg_drift, 0)
+
+    s = _serve_rec(fresh, "adapt_summary")
+    if s is None or _serve_rec(baseline, "adapt_summary") is None:
+        return False, msgs + ["FAIL adapt suite needs an 'adapt_summary' "
+                              "record in both baseline and fresh output"]
+    _gate(gates, "adapt thresh=0 bitmatch", float(s["bitmatch"]), 1.0, "==")
+    if not s["bitmatch"]:
+        ok = False
+        msgs.append("FAIL thresh=0 dynamic merge did not bit-match the "
+                    "plain delta merge")
+    else:
+        msgs.append("ok   thresh=0 + quant-off dynamic merge bit-matches "
+                    "the plain delta merge")
+    _gate(gates, "adapt dynamic<=fixed wire per quant",
+          float(s["dynamic_wire_ok"]), 1.0, "==")
+    if not s["dynamic_wire_ok"]:
+        ok = False
+        msgs.append("FAIL a dynamic cell moved more total wire than its "
+                    "fixed counterpart (the probe isn't paying for itself)")
+    best_c, best_w = s["best_final_C"], s["best_wire_bytes"]
+    for leg in ("dense", "int8"):
+        c, w = s[f"dyn_{leg}_final_C"], s[f"dyn_{leg}_wire_bytes"]
+        ratio = c / (best_c + 1e-12)
+        _gate(gates, f"adapt dyn-{leg} C over best fixed", ratio,
+              1.0 + curve_rtol)
+        _gate(gates, f"adapt dyn-{leg} wire under best fixed", w,
+              best_w - 1)
+        if ratio > 1.0 + curve_rtol or w >= best_w:
+            ok = False
+            msgs.append(
+                f"FAIL dynamic-{leg}: C={c:.5f} wire={w} vs best fixed "
+                f"tau={s['best_tau']} C={best_c:.5f} wire={best_w} "
+                f"(need C within rtol {curve_rtol:.0e} at strictly "
+                f"fewer bytes)")
+        else:
+            msgs.append(
+                f"ok   dynamic-{leg}: C {ratio:.4f}x of best fixed "
+                f"(tau={s['best_tau']}) at {w}/{best_w} wire bytes")
+    return ok, msgs
+
+
 def check_obs(baseline: dict, fresh: dict, *, max_overhead: float = 1.03,
               gates: list | None = None) -> tuple[bool, list[str]]:
     """Obs-suite gate; same contract as ``check``.
@@ -967,6 +1086,9 @@ def main(argv=None) -> int:
                 baseline, fresh,
                 max_consistency=args.max_consistency,
                 min_compute_eff=args.min_compute_eff, gates=gates)
+        elif suites[0] == "adapt":
+            ok, msgs = check_adapt(baseline, fresh,
+                                   curve_rtol=args.curve_rtol, gates=gates)
         else:
             ok, msgs = check(baseline, fresh,
                              max_ratio_regression=args.max_ratio_regression,

@@ -919,6 +919,77 @@ def bench_profile(*, quick: bool = False,
     return rows
 
 
+def bench_adapt(*, quick: bool = False,
+                out_path: str = "BENCH_adapt.json") -> list[str]:
+    """Adaptive communication: divergence-triggered merges + quantized
+    wire vs the fixed-tau frontier, on one workload.
+
+      * ``cell``       — one (merge, quant) run from the shared
+        ``sweep.run_adapt_cells`` grid ({fixed, dynamic} x {dense, bf16,
+        int8}): best-of-3 wall, measured merge + probe wire bytes, how
+        many of the windows actually triggered, final distortion.
+      * ``fixed_leg``  — plain delta-merge legs across tau in (5, 10, 20):
+        the fixed-tau frontier the dynamic merge is gated against.
+      * ``adapt_summary`` — the acceptance predicates in one record: the
+        thresh=0/quant-off run bit-matches the plain delta merge
+        (``bitmatch``), and the dynamic-dense and dynamic-int8 cells land
+        within rtol 1e-2 of the BEST fixed-tau leg's final distortion at
+        strictly fewer total wire bytes.
+
+    Wire bytes and trigger counts are trace-exact and seeded, so the gate
+    pins them EXACTLY; only wall rides ratios."""
+    from repro.comm import sweep
+
+    n = 160 if quick else 240
+    cells = sweep.run_adapt_cells(n=n, repeats=3)
+    legs = sweep.run_fixed_tau_legs(n=n)
+    bitmatch = sweep.adapt_bitmatch(n=n)
+    best = sweep.best_fixed_leg(legs)
+
+    rows, records = [], []
+    for c in cells:
+        rows.append(
+            f"adapt_{c['merge']}_{c['quant']},{c['wall_s'] * 1e6:.0f},"
+            f"wire_B={c['total_wire_bytes']}"
+            f" trig={c['n_triggered']}/{c['n_windows']}"
+            f" final_C={c['final_C']:.5f}")
+        records.append({"kind": "cell", **{k: c[k] for k in (
+            "merge", "quant", "m", "n", "d", "kappa", "tau", "thresh",
+            "max_stale", "wall_s", "merge_wire_bytes", "probe_wire_bytes",
+            "total_wire_bytes", "n_windows", "n_triggered", "final_C")}})
+    for leg in legs:
+        rows.append(f"adapt_fixed_tau{leg['tau']},0,"
+                    f"wire_B={leg['total_wire_bytes']}"
+                    f" final_C={leg['final_C']:.5f}")
+        records.append({"kind": "fixed_leg", **leg})
+
+    dyn = {c["quant"]: c for c in cells if c["merge"] == "dynamic"}
+    summary = {
+        "kind": "adapt_summary", "bitmatch": bitmatch,
+        "best_tau": best["tau"], "best_final_C": best["final_C"],
+        "best_wire_bytes": best["total_wire_bytes"],
+        "dyn_dense_final_C": dyn["dense"]["final_C"],
+        "dyn_dense_wire_bytes": dyn["dense"]["total_wire_bytes"],
+        "dyn_int8_final_C": dyn["int8"]["final_C"],
+        "dyn_int8_wire_bytes": dyn["int8"]["total_wire_bytes"],
+        "dynamic_wire_ok": sweep.adapt_dynamic_wire_ok(cells),
+    }
+    records.append(summary)
+    rows.append(
+        f"adapt_summary,0,bitmatch={bitmatch}"
+        f" best_tau={best['tau']} best_C={best['final_C']:.5f}"
+        f" dyn_C={summary['dyn_dense_final_C']:.5f}"
+        f" dyn_wire={summary['dyn_dense_wire_bytes']}"
+        f"/{summary['best_wire_bytes']}B")
+
+    with open(out_path, "w") as f:
+        json.dump({"suite": "adapt", "devices": len(jax.devices()),
+                   "backend": jax.default_backend(),
+                   "results": records}, f, indent=1)
+    rows.append(f"adapt_records,0,wrote {out_path} ({len(records)} records)")
+    return rows
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -936,6 +1007,7 @@ BENCHES = {
     "obs": bench_obs,
     "chaos": bench_chaos,
     "profile": bench_profile,
+    "adapt": bench_adapt,
 }
 
 # named groups runnable as `--suite NAME`
@@ -948,6 +1020,7 @@ SUITES = {
     "obs": ["obs"],
     "chaos": ["chaos"],
     "profile": ["profile"],
+    "adapt": ["adapt"],
     "paper": ["fig1", "fig2", "fig3", "fig4"],
     "lm": ["throughput", "decode"],
 }
@@ -960,7 +1033,8 @@ _JSON_BENCHES = {"engine": "BENCH_engine.json",
                  "hier": "BENCH_hier.json",
                  "obs": "BENCH_obs.json",
                  "chaos": "BENCH_chaos.json",
-                 "profile": "BENCH_profile.json"}
+                 "profile": "BENCH_profile.json",
+                 "adapt": "BENCH_adapt.json"}
 
 
 def suite_out_path(out: str, name: str, *, multi: bool) -> str:

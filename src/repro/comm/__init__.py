@@ -13,6 +13,9 @@ One ``Transport`` protocol (``comm.api``), four implementations:
     ``repro.topology.Topology``: dense intra-host (tier 0), sparse
     inter-host (tier 1), composing the transports above with per-tier
     ``CommRecord``s.
+  * ``QuantizedTransport`` (``comm.quant``) — bf16/int8/identity delta
+    codecs with error-feedback residual, decorating any of the above;
+    delegated records are re-priced at the quantized wire width.
 
 Every collective the engine/training layers issue goes through a
 transport, which appends a ``CommRecord`` (logical + wire bytes, per
@@ -24,6 +27,7 @@ from repro.comm.api import (CommLog, CommRecord, Transport, axis_label,
                             axis_size, get_transport, ring_wire_bytes,
                             tree_f32_bytes)
 from repro.comm.hier import HierarchicalTransport
+from repro.comm.quant import QUANT_WIDTH, QuantizedTransport, quantize_leaf
 from repro.comm.ring import RingTransport, ring_all_reduce
 from repro.comm.sparse import (SparseTransport, sparse_allsum, topk_count,
                                topk_threshold_mask)
@@ -33,6 +37,7 @@ __all__ = [
     "CommLog", "CommRecord", "Transport", "axis_label", "axis_size",
     "get_transport", "ring_wire_bytes", "tree_f32_bytes",
     "XlaTransport", "RingTransport", "SparseTransport",
-    "HierarchicalTransport",
+    "HierarchicalTransport", "QuantizedTransport",
+    "QUANT_WIDTH", "quantize_leaf",
     "ring_all_reduce", "sparse_allsum", "topk_count", "topk_threshold_mask",
 ]

@@ -39,9 +39,11 @@ guessed.  Conventions, per participant and per call:
     ``(m-1) * k * 8``.  A 1-participant axis moves nothing.
 
 ``tag`` separates merge traffic ("merge") from instrumentation ("eval" —
-the distortion-curve pmean) and host-side resharding transfers
-("late_delta"), so dry-runs and benches can compare merge wire bytes
-without the diagnostics polluting the ratio.
+the distortion-curve pmean), host-side resharding transfers
+("late_delta"), and the dynamic merge's per-window divergence probe
+("probe" — the scalar every worker pays whether or not the window
+triggers), so dry-runs and benches can compare merge wire bytes without
+the diagnostics polluting the ratio.
 """
 
 from __future__ import annotations
@@ -114,7 +116,7 @@ class CommRecord:
     logical_bytes: int     # dense f32 payload per participant per call
     wire_bytes: int        # bytes per participant per call on the wire
     calls: int = 1
-    tag: str = "merge"     # 'merge' | 'eval' | 'late_delta'
+    tag: str = "merge"     # 'merge' | 'eval' | 'late_delta' | 'probe'
     # hierarchical transports split one merge over tiers: 0 = intra-host
     # (ICI-class), 1 = inter-host (DCN-class).  None = untiered (flat).
     tier: int | None = None
@@ -147,17 +149,17 @@ class CommLog:
         its own log, so attaching to both levels would double-count."""
         self._metrics = registry
 
-    def _record_metrics(self, rec: CommRecord) -> None:
+    def _record_metrics(self, rec: CommRecord, sign: float = 1.0) -> None:
         if self._metrics is None:
             return
         labels = {"tag": rec.tag,
                   "tier": "flat" if rec.tier is None else rec.tier,
                   "transport": rec.transport}
         self._metrics.counter("comm_wire_bytes", **labels).inc(
-            rec.wire_bytes * rec.calls)
+            sign * rec.wire_bytes * rec.calls)
         self._metrics.counter("comm_logical_bytes", **labels).inc(
-            rec.logical_bytes * rec.calls)
-        self._metrics.counter("comm_calls", **labels).inc(rec.calls)
+            sign * rec.logical_bytes * rec.calls)
+        self._metrics.counter("comm_calls", **labels).inc(sign * rec.calls)
 
     def _trim(self) -> None:
         excess = len(self.records) - self.max_records
@@ -181,6 +183,31 @@ class CommLog:
 
     def since(self, mark: int) -> list[CommRecord]:
         return list(self.records[max(0, mark - self._dropped):])
+
+    def rewrite_since(self, mark: int, fn) -> None:
+        """Rewrite each record appended after ``mark`` with ``fn(rec)``
+        (return the record unchanged to keep it, a replacement to swap it,
+        ``None`` to drop it).
+
+        The executor's post-run correction hook: a divergence-triggered
+        merge's collective is TRACED with the scan's full trip count (an
+        SPMD program cannot skip a collective), but the wire a real
+        dynamic protocol ships is only the triggered windows' — known only
+        after the run, from the measured trigger bits.  The metrics mirror
+        stays consistent: a replaced/dropped record's original contribution
+        is backed out of the ``comm_*`` counters and the replacement's
+        added, so the counters always equal the log."""
+        start = max(0, mark - self._dropped)
+        out = []
+        for rec in self.records[start:]:
+            new = fn(rec)
+            if new is not rec:
+                self._record_metrics(rec, sign=-1.0)
+                if new is not None:
+                    self._record_metrics(new)
+            if new is not None:
+                out.append(new)
+        self.records[start:] = out
 
     def clear(self) -> None:
         self._dropped += len(self.records)
@@ -266,21 +293,25 @@ class Transport:
 
 
 def get_transport(name, **kwargs) -> Transport:
-    """Factory: 'xla' | 'ring' | 'sparse' | 'hier' (+ transport kwargs).
+    """Factory: 'xla' | 'ring' | 'sparse' | 'hier' | 'quant'
+    (+ transport kwargs).
 
     An already-constructed ``Transport`` passes through unchanged, so call
     sites can accept either spelling.  'hier' composes two of the others
     over a two-tier topology (``tier0=``/``tier1=``/``tier1_frac=`` — see
-    ``repro.comm.hier``).
+    ``repro.comm.hier``); 'quant' decorates any of them with a narrow wire
+    codec (``inner=``/``mode=`` — see ``repro.comm.quant``).
     """
     if isinstance(name, Transport):
         return name
     from repro.comm.hier import HierarchicalTransport
+    from repro.comm.quant import QuantizedTransport
     from repro.comm.ring import RingTransport
     from repro.comm.sparse import SparseTransport
     from repro.comm.xla import XlaTransport
     transports = {"xla": XlaTransport, "ring": RingTransport,
-                  "sparse": SparseTransport, "hier": HierarchicalTransport}
+                  "sparse": SparseTransport, "hier": HierarchicalTransport,
+                  "quant": QuantizedTransport}
     if name not in transports:
         raise ValueError(
             f"unknown transport {name!r}; choose from {sorted(transports)}")

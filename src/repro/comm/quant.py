@@ -1,0 +1,235 @@
+"""``QuantizedTransport`` — bf16/int8 delta encoding over any transport.
+
+The codebook is itself a quantizer; this decorator uses quantization on
+its own merge deltas: each participant encodes its local contribution
+(payload + error-feedback residual) to a narrow wire format, the decoded
+f32 values ride the INNER transport's collective unchanged, and the skipped
+rounding mass is carried into the next call's payload (error feedback,
+Stich et al. style — the same discipline ``SparseTransport`` applies to its
+top-k truncation), so nothing is lost, only delayed.
+
+Three codecs:
+
+  * ``bf16``     — truncate the f32 payload to bfloat16 (2 bytes/entry).
+  * ``int8``     — symmetric per-leaf max-abs scaling:
+    ``q = round(x / s).clip(-127, 127)`` with ``s = max|x| / 127``
+    (1 byte/entry + one f32 scale per leaf on the wire).
+  * ``identity`` — encode/decode is the identity and the wire width stays
+    4 bytes/entry: the decorator is bit-transparent (the parity anchor the
+    tests pin — wrapping any transport in identity quantization changes
+    NOTHING, numerics or accounting).
+
+Wire accounting
+---------------
+
+Delegated ``CommRecord``s are mark/since-copied from the inner transport's
+log into this transport's log (the ``HierarchicalTransport`` discipline)
+with ``wire_bytes`` re-priced at the quantized width:
+
+  * dense records (ring all-reduce of f32 values):
+    ``wire * width // 4``;
+  * sparse records (all-gather of f32 value + int32 index pairs, 8
+    bytes/entry — only the VALUE half narrows):
+    ``wire * (width + 4) // 8``;
+  * ``int8`` additionally charges ``4 * n_leaves`` bytes per call for the
+    per-leaf scales (skipped when the record moved no wire — a
+    1-participant axis still moves nothing);
+  * ``op='mean'`` and host-transfer records pass through unquantized and
+    unchanged: means are consensus values, not compressible displacements
+    (the ``SparseTransport`` convention), so ``AverageMerge`` and the
+    eval-curve reduces are untouched.
+
+Tier tags are preserved verbatim, so a ``QuantizedTransport`` wrapping a
+``HierarchicalTransport`` keeps the per-tier split, and one wrapped INSIDE
+a hier tier arrives untiered and is re-tagged exactly once by the outer
+``_delegate``.  Composition over another ``QuantizedTransport`` is
+rejected — double quantization would double-charge the scale bytes and
+hide one codec's error inside the other's residual.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.api import CommRecord, Pytree, Transport, get_transport
+
+#: wire bytes per payload entry under each codec (dense f32 is 4)
+QUANT_WIDTH = {"identity": 4, "bf16": 2, "int8": 1}
+
+
+def quantize_leaf(x: jax.Array, mode: str) -> jax.Array:
+    """Encode -> decode one f32 leaf: the dequantized f32 values the
+    receiving side reconstructs (the collective sums THESE, so simulating
+    the wire is exact).  Deterministic, shape-preserving."""
+    if mode == "identity":
+        return x
+    if mode == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    if mode == "int8":
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.maximum(amax, 1e-30) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+        return q * scale
+    raise ValueError(
+        f"unknown quantization mode {mode!r}; choose from "
+        f"{sorted(QUANT_WIDTH)}")
+
+
+class QuantizedTransport(Transport):
+    """Quantize sum payloads before the inner transport's collective."""
+
+    name = "quant"
+
+    def __init__(self, inner: Transport | str = "xla", *,
+                 mode: str = "bf16", error_feedback: bool = True,
+                 **inner_kwargs):
+        super().__init__()
+        if mode not in QUANT_WIDTH:
+            raise ValueError(
+                f"unknown quantization mode {mode!r}; choose from "
+                f"{sorted(QUANT_WIDTH)}")
+        if isinstance(inner, Transport) and inner_kwargs:
+            raise ValueError(
+                "pass inner transport kwargs only with a string inner spec; "
+                f"got a constructed transport AND {sorted(inner_kwargs)}")
+        self.inner = (inner if isinstance(inner, Transport)
+                      else get_transport(inner, **inner_kwargs))
+        if isinstance(self.inner, QuantizedTransport):
+            raise ValueError(
+                "inner= must not be a QuantizedTransport: double "
+                "quantization would double-charge scale bytes and hide one "
+                "codec's error inside the other's residual")
+        self.mode = mode
+        # identity is exact: no residual to feed back, no state to thread
+        self.error_feedback = error_feedback and mode != "identity"
+        self.name = f"quant[{mode}:{self.inner.name}]"
+
+    @property
+    def stateful(self) -> bool:  # type: ignore[override]
+        return self.error_feedback or self.inner.stateful
+
+    # -- state threading: residual + inner state in one carry ---------------
+
+    def init_state(self, tree: Pytree) -> Pytree | None:
+        res = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+               if self.error_feedback else None)
+        inner = self.inner.init_state(tree)
+        if res is None:
+            return inner
+        if inner is None:
+            return res
+        return {"q": res, "inner": inner}
+
+    def _split_state(self, state):
+        if self.error_feedback and self.inner.stateful:
+            state = {} if state is None else state
+            return state.get("q"), state.get("inner")
+        if self.error_feedback:
+            return state, None
+        return None, state
+
+    def _join_state(self, res, inner):
+        if self.error_feedback and self.inner.stateful:
+            return {"q": res, "inner": inner}
+        if self.error_feedback:
+            return res
+        return inner
+
+    # -- wire re-pricing ----------------------------------------------------
+
+    def _requant(self, r: CommRecord, n_leaves: int) -> CommRecord:
+        """Re-price one delegated sum record at the quantized width."""
+        if r.op in ("mean", "host"):
+            return r                       # rides dense, unquantized
+        width = QUANT_WIDTH[self.mode]
+        if r.transport.startswith("sparse"):
+            # (value f32, index int32) pairs: only the value half narrows
+            wire = r.wire_bytes * (width + 4) // 8
+        else:
+            wire = r.wire_bytes * width // 4
+        if self.mode == "int8" and r.wire_bytes > 0:
+            wire += 4 * n_leaves           # per-leaf scale broadcast
+        return dataclasses.replace(
+            r, transport=f"{r.transport}+{self.mode}", wire_bytes=wire)
+
+    def _delegated(self, mark: int, n_leaves: int) -> None:
+        for r in self.inner.log.since(mark):
+            self.log.append(self._requant(r, n_leaves))
+
+    # -- encode + delegate --------------------------------------------------
+
+    def _encode(self, tree: Pytree, residual: Pytree | None,
+                mask: jax.Array | None) -> tuple[Pytree, Pytree | None]:
+        """(dequantized payload, new residual).  A masked-out participant
+        contributes zero downstream (the inner masked reduce applies the
+        mask) and keeps its residual untouched — the ``SparseTransport``
+        masking semantics."""
+        def enc(x, r):
+            payload = x.astype(jnp.float32)
+            if r is not None:
+                payload = payload + r
+            deq = quantize_leaf(payload, self.mode)
+            if r is None:
+                return deq, None
+            new_r = payload - deq
+            if mask is not None:
+                new_r = jnp.where(mask != 0, new_r, r)
+            return deq, new_r
+        flat, treedef = jax.tree.flatten(tree)
+        flat_r = (jax.tree.leaves(residual) if residual is not None
+                  else [None] * len(flat))
+        outs = [enc(x, r) for x, r in zip(flat, flat_r)]
+        deq = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        if residual is None:
+            return deq, None
+        return deq, jax.tree.unflatten(treedef, [o[1] for o in outs])
+
+    def _quant_reduce(self, tree: Pytree, axis, *, mask, state, calls: int,
+                      tag: str) -> tuple[Pytree, Pytree | None]:
+        res, inner_state = self._split_state(state)
+        # a state=None call runs residual-free and stays None (the one-shot
+        # convention every stateful transport follows)
+        residual = None
+        if self.error_feedback:
+            residual = (jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+                if res is None else res)
+        deq, new_res = self._encode(tree, residual, mask)
+        mark = self.inner.log.mark()
+        if mask is None:
+            total, inner_state = self.inner.all_reduce(
+                deq, axis, op="sum", state=inner_state, calls=calls, tag=tag)
+        else:
+            total, inner_state = self.inner.masked_all_reduce(
+                deq, mask, axis, state=inner_state, calls=calls, tag=tag)
+        self._delegated(mark, len(jax.tree.leaves(tree)))
+        if state is None:
+            return total, None
+        return total, self._join_state(new_res, inner_state)
+
+    # -- Transport API ------------------------------------------------------
+
+    def all_reduce(self, tree: Pytree, axis, *, op: str = "sum",
+                   state: Pytree | None = None, calls: int = 1,
+                   tag: str = "merge") -> tuple[Pytree, Pytree | None]:
+        if op == "mean":
+            mark = self.inner.log.mark()
+            out, _ = self.inner.all_reduce(tree, axis, op="mean",
+                                           calls=calls, tag=tag)
+            self._delegated(mark, len(jax.tree.leaves(tree)))
+            return out, state
+        if op != "sum":
+            raise ValueError(
+                f"unknown reduce op {op!r}; choose 'sum' or 'mean'")
+        return self._quant_reduce(tree, axis, mask=None, state=state,
+                                  calls=calls, tag=tag)
+
+    def masked_all_reduce(self, tree: Pytree, mask: jax.Array, axis, *,
+                          state: Pytree | None = None, calls: int = 1,
+                          tag: str = "merge") -> tuple[Pytree, Pytree | None]:
+        return self._quant_reduce(tree, axis,
+                                  mask=jnp.asarray(mask, jnp.float32),
+                                  state=state, calls=calls, tag=tag)

@@ -211,3 +211,177 @@ def hier_wall_parity(cells: list[dict]) -> dict[str, float]:
     wall = {(c["scheme"], c["variant"]): c["wall_s"] for c in cells}
     return {s: wall[(s, "hier_dense")] / max(wall[(s, "flat")], 1e-12)
             for s in SCHEMES}
+
+
+# ---------------------------------------------------------------------------
+# adaptive-communication cells — shared by dryrun --comm and --suite adapt
+# ---------------------------------------------------------------------------
+
+ADAPT_QUANTS = ("dense", "bf16", "int8")
+# divergence threshold tuned at the bench shape (m=8, n=240, d=8,
+# kappa=16, tau=10): triggers 18 of 24 windows, landing the final
+# distortion within 0.6% of the best fixed-tau leg at ~76% of its wire —
+# inside the gate's rtol=1e-2 / strictly-fewer-bytes acceptance region
+# with margin on both sides
+ADAPT_THRESH = 2e-5
+ADAPT_TAUS = (5, 10, 20)
+
+
+def _adapt_transport(quant: str):
+    from repro import comm
+    if quant == "dense":
+        return comm.get_transport("xla")
+    return comm.get_transport("quant", inner="xla", mode=quant)
+
+
+def _adapt_wire(last_comm: dict) -> tuple[int, int, int]:
+    """(merge, probe, total) per-worker wire bytes of one run — the
+    dynamic merge pays for its divergence probe, so the comparison
+    charges probe traffic against the bytes the skipped merges saved."""
+    by_tag = last_comm["by_tag"]
+    merge = by_tag.get("merge", {}).get("wire_bytes", 0)
+    probe = by_tag.get("probe", {}).get("wire_bytes", 0)
+    return merge, probe, merge + probe
+
+
+def run_adapt_cells(*, m: int = 8, n: int = 240, d: int = 8,
+                    kappa: int = 16, tau: int = 10,
+                    thresh: float = ADAPT_THRESH, max_stale: int = 8,
+                    repeats: int = 1, seed: int = 0) -> list[dict]:
+    """{fixed, dynamic} x {dense, bf16, int8} delta-merge cells on one
+    workload: the fixed rows merge every tau-window, the dynamic rows
+    merge only when the probed global drift crosses ``thresh`` (synced at
+    latest every ``max_stale`` windows).  Each cell reports the measured
+    merge + probe wire bytes, how many windows actually triggered, wall
+    seconds, and the final distortion."""
+    import jax
+
+    from repro.data import synthetic
+    from repro.engine import InstantNetwork, MeshExecutor
+
+    m = min(m, len(jax.devices()))
+    key = jax.random.PRNGKey(seed)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, : min(200, n)]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+    n_windows = n // tau
+
+    cells: list[dict] = []
+    for quant in ADAPT_QUANTS:
+        for mode in ("fixed", "dynamic"):
+            ex_kw = {}
+            if mode == "dynamic":
+                ex_kw = {"merge": "dynamic", "divergence_thresh": thresh,
+                         "max_stale": max_stale}
+            ex = MeshExecutor(network=InstantNetwork(),
+                              transport=_adapt_transport(quant), **ex_kw)
+            t0 = time.perf_counter()
+            res = ex.run("delta", w0, data, eval_data, tau=tau, key=ka)
+            jax.block_until_ready(res.w_shared)   # compile + first run
+            compile_s = time.perf_counter() - t0
+            samples = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                res = ex.run("delta", w0, data, eval_data, tau=tau, key=ka)
+                jax.block_until_ready(res.w_shared)
+                samples.append(time.perf_counter() - t0)
+            merge_w, probe_w, total_w = _adapt_wire(ex.last_comm)
+            n_trig = (ex.last_comm["by_tag"].get("merge", {}).get("calls", 0)
+                      if mode == "dynamic" else n_windows)
+            cells.append({
+                "merge": mode, "quant": quant,
+                "m": m, "n": n, "d": d, "kappa": kappa, "tau": tau,
+                "thresh": thresh if mode == "dynamic" else None,
+                "max_stale": max_stale if mode == "dynamic" else None,
+                "compile_s": round(compile_s, 1),
+                "wall_s": min(samples) if samples else compile_s,
+                "wall_samples": samples,
+                "merge_wire_bytes": merge_w,
+                "probe_wire_bytes": probe_w,
+                "total_wire_bytes": total_w,
+                "n_windows": n_windows,
+                "n_triggered": n_trig,
+                "final_C": float(res.distortion[-1]),
+            })
+    return cells
+
+
+def run_fixed_tau_legs(*, taus: tuple = ADAPT_TAUS, m: int = 8,
+                       n: int = 240, d: int = 8, kappa: int = 16,
+                       seed: int = 0) -> list[dict]:
+    """Plain delta-merge legs across merge periods — the fixed-tau
+    frontier the dynamic merge has to beat (match the BEST leg's final
+    distortion within rtol at strictly fewer wire bytes)."""
+    import jax
+
+    from repro import comm
+    from repro.data import synthetic
+    from repro.engine import InstantNetwork, MeshExecutor
+
+    m = min(m, len(jax.devices()))
+    key = jax.random.PRNGKey(seed)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, : min(200, n)]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+
+    legs: list[dict] = []
+    for tau in taus:
+        ex = MeshExecutor(network=InstantNetwork(),
+                          transport=comm.get_transport("xla"))
+        res = ex.run("delta", w0, data, eval_data, tau=tau, key=ka)
+        jax.block_until_ready(res.w_shared)
+        _, _, total_w = _adapt_wire(ex.last_comm)
+        legs.append({
+            "tau": tau, "m": m, "n": n, "d": d, "kappa": kappa,
+            "total_wire_bytes": total_w,
+            "n_windows": n // tau,
+            "final_C": float(res.distortion[-1]),
+        })
+    return legs
+
+
+def best_fixed_leg(legs: list[dict]) -> dict:
+    """The fixed-tau leg with the lowest final distortion — the frontier
+    point the dynamic cells are gated against."""
+    return min(legs, key=lambda leg: leg["final_C"])
+
+
+def adapt_dynamic_wire_ok(cells: list[dict]) -> bool:
+    """Per quant level, the dynamic cell's total (merge + probe) wire must
+    not exceed its fixed counterpart's — the probe must pay for itself."""
+    wire = {(c["merge"], c["quant"]): c["total_wire_bytes"] for c in cells}
+    return all(wire[("dynamic", q)] <= wire[("fixed", q)]
+               for q in ADAPT_QUANTS)
+
+
+def adapt_bitmatch(*, m: int = 8, n: int = 240, d: int = 8,
+                   kappa: int = 16, tau: int = 10, seed: int = 0) -> bool:
+    """thresh=0 + quantization off: the dynamic merge must reproduce the
+    plain fixed-tau delta merge BITWISE (every window triggers, the probe
+    adds no numerics, 1.0 * delta and + 0.0 carry are exact)."""
+    import jax
+    import numpy as np
+
+    from repro import comm
+    from repro.data import synthetic
+    from repro.engine import InstantNetwork, MeshExecutor
+
+    m = min(m, len(jax.devices()))
+    key = jax.random.PRNGKey(seed)
+    kd, kw, ka = jax.random.split(key, 3)
+    data = synthetic.replicate_stream(kd, m, n=n, d=d)
+    eval_data = data[:, : min(200, n)]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, d), kappa)
+
+    ex_f = MeshExecutor(network=InstantNetwork(),
+                        transport=comm.get_transport("xla"))
+    ref = ex_f.run("delta", w0, data, eval_data, tau=tau, key=ka)
+    ex_d = MeshExecutor(network=InstantNetwork(),
+                        transport=comm.get_transport("xla"),
+                        merge="dynamic", divergence_thresh=0.0)
+    dyn = ex_d.run("delta", w0, data, eval_data, tau=tau, key=ka)
+    return bool(
+        np.array_equal(np.asarray(ref.distortion), np.asarray(dyn.distortion))
+        and np.array_equal(np.asarray(ref.w_shared), np.asarray(dyn.w_shared)))

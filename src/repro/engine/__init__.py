@@ -23,11 +23,12 @@ from repro.engine.chaos import ChaosEvent, ChaosNetwork, ChaosSchedule
 from repro.engine.elastic import (ElasticMeshExecutor, ResizeEvent,
                                   ResizeSchedule)
 from repro.engine.merge import (AsyncDeltaMerge, AverageMerge, DeltaMerge,
-                                MergeStrategy, QuorumMerge, SparseDeltaMerge,
-                                get_merge)
+                                DynamicMerge, MergeStrategy, QuorumMerge,
+                                SparseDeltaMerge, get_merge)
 from repro.engine.mesh import MeshExecutor, make_worker_mesh
 from repro.engine.network import (FixedLatencyNetwork, GeometricDelayNetwork,
-                                  InstantNetwork, NetworkModel, get_network)
+                                  InstantNetwork, NetworkModel,
+                                  Tier1BudgetController, get_network)
 from repro.engine.sim import SimExecutor
 from repro.engine.threads import ThreadExecutor
 from repro.topology import Topology
@@ -36,9 +37,9 @@ __all__ = [
     "SCHEMES", "Executor", "get_executor",
     "Transport", "get_transport", "HierarchicalTransport", "Topology",
     "MergeStrategy", "AverageMerge", "DeltaMerge", "AsyncDeltaMerge",
-    "SparseDeltaMerge", "QuorumMerge", "get_merge",
+    "SparseDeltaMerge", "QuorumMerge", "DynamicMerge", "get_merge",
     "NetworkModel", "InstantNetwork", "FixedLatencyNetwork",
-    "GeometricDelayNetwork", "get_network",
+    "GeometricDelayNetwork", "Tier1BudgetController", "get_network",
     "ChaosEvent", "ChaosSchedule", "ChaosNetwork",
     "SimExecutor", "MeshExecutor", "ThreadExecutor", "make_worker_mesh",
     "ElasticMeshExecutor", "ResizeEvent", "ResizeSchedule",

@@ -244,23 +244,111 @@ class QuorumMerge(MergeStrategy):
         return merged, self._join_state(carry_new, tsp)
 
 
+class DynamicMerge(MergeStrategy):
+    """Kamp-style dynamic averaging for eq. (8): merge on measured drift,
+    not on a clock.
+
+    Every window each worker computes its pending displacement (this
+    window's delta plus the carried, staleness-damped backlog) and the
+    workers agree on a GLOBAL drift measure via a 4-byte scalar probe —
+    the sum over workers of ``||pending||^2``.  The window merges only
+    when that drift crosses ``thresh`` (or when ``max_stale`` windows have
+    passed since the last merge, the hysteresis cap that keeps the eq.-8
+    staleness damping bounded — Patra's staleness-tolerant analysis covers
+    the wait).  The decision is a per-window 0/1 mask on the transport's
+    masked all-reduce, so ONE compiled program serves every window; the
+    executor reads the trigger bits back and re-prices the traced merge
+    records to the triggered count (skipped windows ship only the probe).
+
+    A skipped window's displacement is not lost: it rides the worker's
+    carry, damped by one ``staleness_scale(1, gamma)`` factor per window
+    it waits (the same stale-window rule ``QuorumMerge`` and
+    ``engine.elastic`` apply), and lands whole with the next trigger.
+
+    With ``thresh=0`` the probe is always >= the threshold, every window
+    triggers with a zero carry, and the math reduces term-by-term to the
+    plain ``DeltaMerge`` — the bitwise-parity contract the adapt suite
+    pins.
+
+    ``state`` carries ``{"carry": pending-delta tree, "stale": windows
+    since the last merge}``.  ``last_trigger`` exposes the window's traced
+    trigger scalar to the surrounding scan body (the executor stacks it
+    into the per-window trigger output).
+    """
+
+    name = "dynamic"
+    own_state = True
+
+    def __init__(self, transport: comm.Transport | None = None, *,
+                 thresh: float = 0.0, gamma: float = 0.5,
+                 max_stale: int = 8):
+        if thresh < 0.0:
+            raise ValueError(f"divergence thresh must be >= 0, got {thresh}")
+        if max_stale < 1:
+            raise ValueError(f"max_stale must be >= 1, got {max_stale}")
+        super().__init__(transport)
+        self.thresh = thresh
+        self.gamma = gamma
+        self.max_stale = max_stale
+        self.last_trigger = None
+
+    def _init_own_state(self, params):
+        return {"carry": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "stale": jnp.zeros((), jnp.float32)}
+
+    def __call__(self, w0, w_local, axis, state=None, *, calls=1):
+        from repro.distributed.elastic import staleness_scale
+        own, tsp = self._split_state(state)
+        if own is None:
+            raise ValueError("DynamicMerge needs its carry/staleness state; "
+                             "seed it with init_state(params)")
+        carry, stale = own["carry"], own["stale"]
+        s = jnp.asarray(staleness_scale(1, gamma=self.gamma), jnp.float32)
+        delta = tree_sub_f32(w0, w_local)
+        pend = jax.tree.map(lambda d, c: d + s * c, delta, carry)
+        # the probe: global drift as a scalar all-reduce (tag "probe" — the
+        # always-paid signaling cost, accounted apart from merge payload);
+        # psum is replicated, so every worker decides identically
+        local = jnp.asarray(0.0, jnp.float32)
+        for leaf in jax.tree.leaves(pend):
+            local = local + jnp.sum(leaf * leaf)
+        gdiv, _ = self.transport.all_reduce(local, axis, op="sum",
+                                            calls=calls, tag="probe")
+        trig = jnp.logical_or(gdiv >= self.thresh,
+                              stale + 1.0 >= self.max_stale
+                              ).astype(jnp.float32)
+        landed, tsp = self.transport.masked_all_reduce(
+            pend, trig, axis, state=tsp, calls=calls)
+        merged = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) - trig * d).astype(p.dtype),
+            w0, landed)
+        keep = 1.0 - trig
+        carry_new = jax.tree.map(lambda sh: keep * sh, pend)
+        self.last_trigger = trig
+        return merged, self._join_state(
+            {"carry": carry_new, "stale": keep * (stale + 1.0)}, tsp)
+
+
 _STRATEGIES = {
     "average": AverageMerge,
     "delta": DeltaMerge,
     "delta_sparse": SparseDeltaMerge,
     "async_delta": AsyncDeltaMerge,
     "quorum": QuorumMerge,
+    "dynamic": DynamicMerge,
 }
 
 
 def get_merge(name: str, transport: comm.Transport | None = None,
               **kwargs) -> MergeStrategy:
     """Factory: 'average' | 'delta' | 'delta_sparse' | 'async_delta' |
-    'quorum'.
+    'quorum' | 'dynamic'.
 
     ``transport`` plugs any ``repro.comm`` transport under the strategy
     (default: dense XLA); ``delta_sparse`` additionally accepts ``frac``;
-    ``quorum`` accepts ``quorum_frac`` and ``gamma``.
+    ``quorum`` accepts ``quorum_frac`` and ``gamma``; ``dynamic`` accepts
+    ``thresh``, ``gamma``, and ``max_stale``.
     """
     if name not in _STRATEGIES:
         raise ValueError(

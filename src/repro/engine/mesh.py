@@ -38,6 +38,7 @@ bit-for-bit the one a real 8-chip mesh runs.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Callable
 
@@ -136,18 +137,25 @@ class MeshExecutor:
                  publish_every: int = 1,
                  merge: str | None = None, quorum_frac: float = 0.6,
                  staleness_gamma: float = 0.5,
+                 divergence_thresh: float = 0.0, max_stale: int = 8,
+                 tier1_controller=None,
                  tracer: Tracer | None = None,
                  metrics: MetricsRegistry | None = None,
                  profiler=None):
         if not axis:
             raise ValueError("worker axis name must be a non-empty string")
-        if merge not in (None, "quorum"):
+        if merge not in (None, "quorum", "dynamic"):
             raise ValueError(
-                f"merge override must be None (scheme default) or 'quorum', "
-                f"got {merge!r}")
+                f"merge override must be None (scheme default), 'quorum', "
+                f"or 'dynamic', got {merge!r}")
         if not 0.0 < quorum_frac <= 1.0:
             raise ValueError(
                 f"quorum_frac must be in (0, 1], got {quorum_frac}")
+        if divergence_thresh < 0.0:
+            raise ValueError(
+                f"divergence_thresh must be >= 0, got {divergence_thresh}")
+        if max_stale < 1:
+            raise ValueError(f"max_stale must be >= 1, got {max_stale}")
         if topology is not None:
             if mesh is not None:
                 raise ValueError(
@@ -182,10 +190,24 @@ class MeshExecutor:
         # merge override: None = the scheme's own strategy (the default,
         # byte-identical program); "quorum" = straggler-tolerant eq. 8
         # (delta scheme only), proceeding on ceil(quorum_frac * M) arrivals
-        # and folding late deltas via the stale-window rule
+        # and folding late deltas via the stale-window rule; "dynamic" =
+        # divergence-triggered eq. 8 (delta scheme only): merge when the
+        # probed global drift crosses divergence_thresh or max_stale
+        # windows have passed, re-pricing the traced merge wire to the
+        # measured trigger count after each run
         self.merge = merge
         self.quorum_frac = quorum_frac
         self.staleness_gamma = staleness_gamma
+        self.divergence_thresh = divergence_thresh
+        self.max_stale = max_stale
+        # bandwidth-adaptive sparse tier: a Tier1BudgetController re-sizes
+        # the transport's tier1_frac after every published chunk from the
+        # chunk's measured tier-1 wire bytes (engine.network closes the
+        # loop the CommLog/transfer_ticks accounting opened); setting it
+        # routes sync runs through the chunked publish path even without
+        # an on_window hook, since frac is trace-static and can only
+        # change at a program boundary
+        self.tier1_controller = tier1_controller
         # publication hook: when set, the sync schemes run in host-level
         # chunks of ``publish_every`` windows (numerically identical — the
         # window scan is sequential either way) and ``on_window(windows_done,
@@ -309,7 +331,8 @@ class MeshExecutor:
                                           eps0=eps0, decay=decay, key=key)
                     if self.on_window is not None:
                         self.on_window(data.shape[1] // tau, res.w_shared)
-                elif self.on_window is not None:
+                elif (self.on_window is not None
+                      or self.tier1_controller is not None):
                     res = self._run_sync_published(mesh, scheme, w0, data,
                                                    eval_data, tau=tau,
                                                    eps0=eps0, decay=decay,
@@ -355,7 +378,8 @@ class MeshExecutor:
         mark = self.transport.log.mark()
         try:
             with self.tracer.span("segment", scheme=scheme, m=m, t0=t0):
-                if self.on_window is not None:
+                if (self.on_window is not None
+                        or self.tier1_controller is not None):
                     res = self._run_sync_published(mesh, scheme, w0, data,
                                                    eval_data, tau=tau,
                                                    eps0=eps0, decay=decay,
@@ -403,12 +427,14 @@ class MeshExecutor:
                 wt = int(res.wall_ticks[0])
             curves.append(np.asarray(res.distortion))
             ticks.append(base * wt + np.asarray(res.wall_ticks))
-            self.on_window(base + res.wall_ticks.shape[0], res.w_shared)
+            if self.on_window is not None:
+                self.on_window(base + res.wall_ticks.shape[0], res.w_shared)
             return wt
 
         while done < n_windows:
             k = min(self.publish_every, n_windows - done)
             seg = data[:, done * tau:(done + k) * tau]
+            cmark = self.transport.log.mark()
             with self.tracer.span("chunk", windows=k, t0=t):
                 res, ms = self._run_sync(mesh, scheme, w, seg, eval_data,
                                          tau=tau, eps0=eps0, decay=decay,
@@ -422,6 +448,8 @@ class MeshExecutor:
                 wt = drain((res, done), wt)
             done += k
             t += k * tau
+            if self.tier1_controller is not None:
+                self._adapt_tier1(cmark, n_windows_chunk=k, t_ticks=t)
         if pending is not None:
             wt = drain(pending, wt)
         if not curves:
@@ -431,6 +459,36 @@ class MeshExecutor:
             w_shared=w,
             wall_ticks=jnp.asarray(np.concatenate(ticks), jnp.int32),
             distortion=jnp.asarray(np.concatenate(curves)))
+
+    def _adapt_tier1(self, cmark: int, *, n_windows_chunk: int,
+                     t_ticks: int) -> None:
+        """One bandwidth-control step: feed the chunk's measured tier-1
+        merge wire (bytes per window) to the ``Tier1BudgetController``,
+        which re-sizes the transport's sparse fraction in place.  The new
+        frac enters the next chunk's compile-cache key, so the program set
+        stays bounded by the controller's ladder."""
+        recs = self.transport.log.since(cmark)
+        wire1 = sum(r.wire_bytes * r.calls for r in recs
+                    if r.tag in ("merge", "probe") and r.tier == 1)
+        frac = self.tier1_controller.update(
+            self.transport, wire1 / max(n_windows_chunk, 1))
+        if frac is None:
+            return
+        if self.metrics is not None:
+            self.metrics.gauge("tier1_frac").set(frac)
+        if self.tracer.enabled:
+            self.tracer.counter("tier1_frac", float(frac),
+                                ts_us=float(t_ticks))
+
+    def _transport_frac_key(self) -> tuple:
+        """Compile-cache fingerprint of the transport's trace-affecting
+        compression knobs: the adaptive controller mutates ``frac`` (a
+        static top-k shape) between chunks, so a cached program must be
+        keyed on the value it was traced with.  A ``QuantizedTransport``
+        is transparent here (the knobs live on its inner transport)."""
+        t = self.transport
+        t = getattr(t, "inner", t)
+        return (getattr(t, "tier1_frac", None), getattr(t, "frac", None))
 
     def _run_sync(self, mesh: Mesh, scheme: str, w0, data, eval_data, *,
                   tau: int, eps0: float, decay: float, t0: int = 0,
@@ -447,6 +505,8 @@ class MeshExecutor:
         n = data.shape[1]
         n_windows = n // tau
         quorum = self.merge == "quorum"
+        dynamic = self.merge == "dynamic"
+        late_np = None
         if quorum:
             if scheme != "delta":
                 raise ValueError(
@@ -461,9 +521,17 @@ class MeshExecutor:
             late_np = np.asarray(
                 self.network.late_matrix(m, n_windows, tau,
                                          window0=t0 // tau), np.float32)
+        elif dynamic:
+            if scheme != "delta":
+                raise ValueError(
+                    "the dynamic merge folds eq.-8 displacements, so it "
+                    f"rides scheme 'delta' only; got scheme {scheme!r}")
+            strategy = merge_lib.get_merge(
+                "dynamic", transport=self.transport,
+                thresh=self.divergence_thresh, gamma=self.staleness_gamma,
+                max_stale=self.max_stale)
         else:
             strategy = merge_lib.get_merge(scheme, transport=self.transport)
-            late_np = None
         transport = self.transport
         use_pallas = self.use_pallas
         fused = self.fused
@@ -508,6 +576,10 @@ class MeshExecutor:
                 else:
                     w_srd, ms = strategy(w_srd, w_fin, axis, ms,
                                          calls=n_windows)
+                # the dynamic merge's per-window sync decision, stacked into
+                # a program output so the host can re-price the wire and tag
+                # the trace with what actually triggered
+                extra = (strategy.last_trigger,) if dynamic else ()
                 t = t + tau
                 if observe:
                     # one stacked reduce for (distortion, divergence): the
@@ -518,28 +590,38 @@ class MeshExecutor:
                         jnp.stack([vq.distortion(ev, w_srd),
                                    jnp.sum((w_fin - w_srd) ** 2)]),
                         axis, op="mean", calls=n_windows, tag="eval")
-                    return (w_srd, t, ms), (cd[0], cd[1])
+                    return (w_srd, t, ms), (cd[0], cd[1]) + extra
                 c, _ = transport.all_reduce(
                     vq.distortion(ev, w_srd), axis, op="mean",
                     calls=n_windows, tag="eval")
-                return (w_srd, t, ms), c
+                return (w_srd, t, ms), ((c,) + extra if dynamic else c)
 
             (w_srd, _, ms_out), ys = jax.lax.scan(
                 window, (w0_in, t0_in, ms0), xs)
             ms_out = jax.tree.map(lambda x: x[None], ms_out)
+            if observe and dynamic:
+                return w_srd, ys[0], ys[1], ys[2], ms_out
             if observe:
+                return w_srd, ys[0], ys[1], ms_out
+            if dynamic:
                 return w_srd, ys[0], ys[1], ms_out
             return w_srd, ys, ms_out
 
         cache_key = ("sync", scheme, mesh, w0.shape, data.shape,
                      eval_data.shape, tau, eps0, decay, use_pallas, fused,
-                     vmem_budget, observe)
+                     vmem_budget, observe, self._transport_frac_key())
         if quorum:
             cache_key += ("quorum", self.quorum_frac, self.staleness_gamma)
+        if dynamic:
+            cache_key += ("dynamic", self.divergence_thresh,
+                          self.staleness_gamma, self.max_stale)
 
         def build():
-            out_specs = ((P(), P(), P(), P(axis)) if observe
-                         else (P(), P(), P(axis)))
+            # replicated outputs: w_shared + curve (+ divergence when
+            # observing, + trigger bits when dynamic), then the sharded
+            # merge state
+            n_rep = 2 + (1 if observe else 0) + (1 if dynamic else 0)
+            out_specs = tuple(P() for _ in range(n_rep)) + (P(axis),)
             in_specs = (P(), P(), P(axis), P(axis), P(axis))
             if quorum:
                 in_specs += (P(axis),)
@@ -553,6 +635,7 @@ class MeshExecutor:
         if quorum:
             args += (jnp.asarray(late_np),)
         freshly_compiled = cache_key not in self._compiled
+        mark2 = self.transport.log.mark()
         out = self._call_compiled(cache_key, build, *args)
         if self.profiler is not None:
             self.profiler.note_segment(
@@ -561,13 +644,44 @@ class MeshExecutor:
                 m=m, n_windows=n_windows, d=w0.shape[-1], kappa=w0.shape[0],
                 tau=tau, n_eval=eval_data.shape[1],
                 compiled=freshly_compiled)
-        if observe:
+        trig = None
+        if observe and dynamic:
+            w_final, curve, divergence, trig, ms_out = out
+        elif observe:
             w_final, curve, divergence, ms_out = out
+        elif dynamic:
+            (w_final, curve, trig, ms_out), divergence = out, None
         else:
             (w_final, curve, ms_out), divergence = out, None
-        # each tier's measured per-window merge bytes is charged at that
-        # link class's bandwidth (slow-DCN tier 1 vs ICI tier 0)
-        tier_wire = self._merge_wire_by_tier(cache_key)
+        trig_np = None
+        if dynamic:
+            # honest wire accounting: SPMD can't skip a collective at trace
+            # time, so the traced merge records claim every window synced;
+            # re-price them to the windows that actually TRIGGERED (the
+            # probe stays at full calls — its psum runs every window)
+            trig_np = np.asarray(trig)
+            n_trig = int(trig_np.sum())
+
+            def _reprice(r):
+                if r.tag != "merge" or r.calls == n_trig:
+                    return r
+                if n_trig == 0:
+                    return None
+                return dataclasses.replace(r, calls=n_trig)
+
+            self.transport.log.rewrite_since(mark2, _reprice)
+            # dynamic segments re-derive the tier split from the CORRECTED
+            # records (merge at n_trig calls + the every-window probe)
+            # instead of the trace-time cache snapshot
+            tier_wire = {}
+            for r in self.transport.log.since(mark2):
+                if r.tag in ("merge", "probe"):
+                    tier_wire[r.tier] = (tier_wire.get(r.tier, 0)
+                                         + r.wire_bytes * r.calls)
+        else:
+            # each tier's measured per-window merge bytes is charged at that
+            # link class's bandwidth (slow-DCN tier 1 vs ICI tier 0)
+            tier_wire = self._merge_wire_by_tier(cache_key)
         wt = self.network.window_ticks(tau)
         for tier, total in tier_wire.items():
             wt += self.network.transfer_ticks(total / max(n_windows, 1),
@@ -577,7 +691,7 @@ class MeshExecutor:
             self._emit_sync_obs(scheme=scheme, m=m, n_windows=n_windows,
                                 tau=tau, wt=wt, tier_wire=tier_wire,
                                 w_start=t0 // tau, curve=curve,
-                                divergence=divergence)
+                                divergence=divergence, trig_np=trig_np)
             if quorum:
                 self._emit_chaos_obs(w_start=t0 // tau, n_windows=n_windows,
                                      wt=wt, late_np=late_np)
@@ -618,7 +732,7 @@ class MeshExecutor:
 
     def _emit_sync_obs(self, *, scheme: str, m: int, n_windows: int,
                        tau: int, wt: int, tier_wire: dict, w_start: int,
-                       curve, divergence) -> None:
+                       curve, divergence, trig_np=None) -> None:
         """Mirror one sync segment onto the tick timeline and the registry.
 
         The window scan is a fused device program, so the per-worker
@@ -631,8 +745,13 @@ class MeshExecutor:
         tr, mt = self.tracer, self.metrics
         curve_np = np.asarray(curve)
         div_np = None if divergence is None else np.asarray(divergence)
+        n_trig = None if trig_np is None else int(trig_np.sum())
         if mt is not None:
             mt.counter("windows_total", scheme=scheme).inc(n_windows)
+            if n_trig is not None:
+                mt.counter("divergence_trigger", scheme=scheme).inc(n_trig)
+                mt.counter("merge_skipped_total",
+                           scheme=scheme).inc(n_windows - n_trig)
             h = mt.histogram("distortion", scheme=scheme)
             for c in curve_np:
                 h.observe(float(c))
@@ -671,14 +790,21 @@ class MeshExecutor:
                 add("compute", t_start, tau, track=track, window=win,
                     worker=worker)
             t_m = t_start + tau
+            # dynamic merges tag each span with whether this window's
+            # divergence probe actually fired the sync
+            tag = ({} if trig_np is None
+                   else {"triggered": bool(trig_np[wi])})
             for track, tier_attr, wire, dur in tier_rows:
                 add("merge", t_m, dur, track=track, tier=tier_attr,
-                    wire_bytes=wire, window=win, scheme=scheme)
+                    wire_bytes=wire, window=win, scheme=scheme, **tag)
                 t_m += dur
             t_end = t_start + wt
             tr.counter("distortion", float(curve_np[wi]), ts_us=t_end)
             if div_np is not None:
                 tr.counter("codebook_divergence", float(div_np[wi]),
+                           ts_us=t_end)
+            if trig_np is not None:
+                tr.counter("divergence_trigger", float(trig_np[wi]),
                            ts_us=t_end)
 
     # -- asynchronous scheme (eq. 9) ----------------------------------------

@@ -170,6 +170,80 @@ class GeometricDelayNetwork(NetworkModel):
         return (np.maximum(extra, 0) > tau).astype(np.float32)
 
 
+class Tier1BudgetController:
+    """Host-side bandwidth-adaptive top-k: size ``tier1_frac`` to a wire
+    budget per window.
+
+    Closes the loop the accounting layers left open: ``CommLog`` records
+    the MEASURED per-tier wire bytes each window moved and
+    ``FixedLatencyNetwork.transfer_ticks`` prices the DCN tier — this
+    controller reads both after every published chunk and widens/narrows
+    the sparse tier's top-k fraction so the inter-host transfer stays on
+    ``budget_ticks`` wall ticks per window.
+
+    The step rule is a factor-2 ladder with hysteresis: halve ``frac``
+    when the measured transfer overshoots the budget, double it when it
+    undershoots ``low_water * budget_ticks`` (a free network never
+    overshoots, so it relaxes to ``max_frac`` — send everything when the
+    wire is free).  The ladder matters operationally: ``frac`` is
+    trace-static (top-k count is a shape), so every distinct value is a
+    distinct compiled program — a geometric ladder bounds the recompile
+    set to ``log2(max_frac / min_frac)`` programs, which the executor's
+    cache then reuses.
+
+    Works on a ``HierarchicalTransport`` (adapts ``transport.tier1.frac``)
+    or directly on a flat ``SparseTransport`` (adapts ``transport.frac``).
+    """
+
+    def __init__(self, network: NetworkModel, *, budget_ticks: int = 2,
+                 min_frac: float = 1.0 / 1024.0, max_frac: float = 1.0,
+                 low_water: float = 0.5):
+        if budget_ticks < 1:
+            raise ValueError(f"budget_ticks must be >= 1, got {budget_ticks}")
+        if not 0.0 < min_frac <= max_frac <= 1.0:
+            raise ValueError(
+                f"need 0 < min_frac <= max_frac <= 1, got "
+                f"({min_frac}, {max_frac})")
+        if not 0.0 <= low_water < 1.0:
+            raise ValueError(f"low_water must be in [0, 1), got {low_water}")
+        self.network = network
+        self.budget_ticks = budget_ticks
+        self.min_frac = min_frac
+        self.max_frac = max_frac
+        self.low_water = low_water
+        self.last_frac: float | None = None
+
+    @staticmethod
+    def _target(transport):
+        """The object whose ``frac`` this controller owns, or None.  A
+        ``QuantizedTransport`` decorator is transparent: the knob lives on
+        its inner transport."""
+        transport = getattr(transport, "inner", transport)
+        tier1 = getattr(transport, "tier1", None)
+        if tier1 is not None and hasattr(tier1, "frac"):
+            return tier1
+        if hasattr(transport, "frac"):
+            return transport
+        return None
+
+    def update(self, transport, wire_per_window: float) -> float | None:
+        """One control step from a chunk's measured tier-1 bytes/window;
+        mutates the transport's frac and returns it (None: no sparse tier
+        to adapt — dense tiers have no knob)."""
+        target = self._target(transport)
+        if target is None:
+            return None
+        frac = float(target.frac)
+        ticks = self.network.transfer_ticks(wire_per_window, tier=1)
+        if ticks > self.budget_ticks:
+            frac = max(frac / 2.0, self.min_frac)
+        elif ticks <= self.low_water * self.budget_ticks:
+            frac = min(frac * 2.0, self.max_frac)
+        target.frac = frac
+        self.last_frac = frac
+        return frac
+
+
 _NETWORKS = {
     "instant": InstantNetwork,
     "fixed": FixedLatencyNetwork,

@@ -29,6 +29,17 @@ from the latest resize point:
     PYTHONPATH=src python -m repro.launch.train --mode vq --executor mesh \
         --workers 8 --resize 20:4,40:8 [--ckpt-dir /tmp/ck] [--resume]
 
+Adaptive communication — sync only when the codebooks have drifted, and
+ship less when you do: ``--merge dynamic`` triggers the reducing phase on
+measured divergence (``--divergence-thresh``, force-synced every
+``--max-stale`` windows), ``--wire-quant int8`` quantizes the merge deltas
+on the wire with error feedback, and ``--tier1-frac auto`` sizes the
+sparse inter-host tier from measured bandwidth:
+
+    PYTHONPATH=src python -m repro.launch.train --mode vq --executor mesh \
+        --workers 8 --scheme delta --merge dynamic --divergence-thresh 5 \
+        --wire-quant int8
+
 Chaos VQ — seeded fault injection over any of the above: ``--chaos
 "7:kill=2,slow=1,part=1"`` draws a deterministic kill/straggler/partition
 schedule from seed 7, turns each death into an unscheduled elastic resize,
@@ -110,14 +121,24 @@ def run_vq(args) -> int:
         args.transport,
         **({"frac": args.compress_frac} if args.transport == "sparse"
            else {}))
+    tier1_auto = args.tier1_frac == "auto"
     topology = None
     if args.hosts > 1:
         # hierarchical platform: the flat transport becomes tier 0 (dense
         # intra-host), tier 1 crosses the host groups — sparse by default,
         # at the k/kappa = 0.25 acceptance point unless --tier1-frac says
-        # otherwise (the paper's slow-DCN regime)
-        tier1_frac = (args.tier1_frac if args.tier1_frac is not None
-                      else acceptance_sparse_frac(args.kappa, args.dim))
+        # otherwise (the paper's slow-DCN regime).  'auto' also starts at
+        # the acceptance point; the bandwidth controller takes over from
+        # there.
+        if args.tier1_frac is None or tier1_auto:
+            tier1_frac = acceptance_sparse_frac(args.kappa, args.dim)
+        else:
+            try:
+                tier1_frac = float(args.tier1_frac)
+            except ValueError:
+                print(f"error: --tier1-frac must be a float or 'auto', "
+                      f"got {args.tier1_frac!r}")
+                return 2
         try:
             # build the tier-1 transport FIRST: a bad --tier1-frac should
             # report as a frac error even on a box with too few devices
@@ -133,6 +154,34 @@ def run_vq(args) -> int:
         except ValueError as e:  # bad tier-1 frac / hosts split
             print(f"error: {e}")
             return 2
+    if args.wire_quant != "off":
+        # quantized wire format decorates the WHOLE transport stack (flat
+        # or hierarchical): deltas cross every link at the narrow width,
+        # the error-feedback residual re-injects the rounding error
+        if args.executor != "mesh":
+            print(f"error: --wire-quant quantizes the mesh transport's "
+                  f"collectives; got --executor {args.executor}")
+            return 2
+        transport = comm.get_transport("quant", inner=transport,
+                                       mode=args.wire_quant)
+    tier1_controller = None
+    if tier1_auto:
+        if args.executor != "mesh":
+            print(f"error: --tier1-frac auto adapts the mesh transport's "
+                  f"sparse tier; got --executor {args.executor}")
+            return 2
+        if args.hosts <= 1 and args.transport != "sparse":
+            print("error: --tier1-frac auto needs a sparse tier to adapt "
+                  "(--hosts > 1 with a sparse --tier1-transport, or a flat "
+                  "--transport sparse)")
+            return 2
+        if args.resize or args.chaos:
+            print("error: --tier1-frac auto is a plain-mesh feature; it "
+                  "does not compose with --resize/--chaos")
+            return 2
+        from repro.engine import Tier1BudgetController
+        tier1_controller = Tier1BudgetController(
+            network, budget_ticks=args.tier1_budget_ticks)
     chaos = None
     if args.chaos:
         # seeded fault injection: parse the schedule against the run's
@@ -159,14 +208,33 @@ def run_vq(args) -> int:
               "checkpoint at resize events; plain runs have no VQ "
               "checkpoint to restore)")
         return 2
-    # the straggler-tolerant quorum merge (delta scheme only): stragglers'
-    # deltas fold in late instead of stalling the barrier.  --chaos implies
-    # it — an injected fault must not deadlock the merge.
-    merge = "quorum" if (args.chaos or args.quorum) else None
+    # merge strategy: --chaos/--quorum imply the straggler-tolerant quorum
+    # merge (an injected fault must not deadlock the barrier); --merge
+    # dynamic opts into divergence-triggered syncs.  Both fold eq.-8
+    # displacements, so both ride the delta scheme only.
+    merge = args.merge
+    if args.chaos or args.quorum:
+        if merge == "dynamic":
+            print("error: --merge dynamic conflicts with --chaos/--quorum "
+                  "(faults ride the quorum merge's late matrix; the "
+                  "dynamic merge has no lateness channel)")
+            return 2
+        merge = "quorum"
     if merge is not None and args.scheme != "delta":
-        print(f"error: the quorum merge folds eq.-8 displacements, so "
-              f"--chaos/--quorum need --scheme delta; got {args.scheme!r}")
+        print(f"error: the {merge} merge folds eq.-8 displacements, so it "
+              f"needs --scheme delta; got {args.scheme!r}")
         return 2
+    if merge == "dynamic":
+        if args.executor != "mesh":
+            print(f"error: --merge dynamic runs the divergence probe "
+                  f"inside the compiled mesh program; got --executor "
+                  f"{args.executor}")
+            return 2
+        if args.resize:
+            print("error: --merge dynamic does not compose with --resize "
+                  "(the elastic path reshards quorum/plain merge state "
+                  "only)")
+            return 2
     ckpt = None
     needs_elastic = bool(args.resize) or (chaos is not None
                                           and chaos.kill_events)
@@ -179,6 +247,11 @@ def run_vq(args) -> int:
         if args.resume and not args.ckpt_dir:
             print("error: --resume needs --ckpt-dir (the elastic resume "
                   "restores the latest resize checkpoint)")
+            return 2
+        if args.wire_quant != "off":
+            print("error: --wire-quant does not compose with elastic "
+                  "resizes (the error-feedback residual is per-worker "
+                  "state the resharder does not carry across a resize)")
             return 2
         ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
         ex_name = "elastic"
@@ -205,9 +278,15 @@ def run_vq(args) -> int:
         if args.executor == "mesh":
             ex_kw["transport"] = transport
             ex_kw["topology"] = topology
-            if merge is not None:
+            if merge == "quorum":
                 ex_kw["merge"] = merge
                 ex_kw["quorum_frac"] = args.quorum_frac
+            elif merge == "dynamic":
+                ex_kw["merge"] = merge
+                ex_kw["divergence_thresh"] = args.divergence_thresh
+                ex_kw["max_stale"] = args.max_stale
+            if tier1_controller is not None:
+                ex_kw["tier1_controller"] = tier1_controller
     ex_kw["tracer"] = tracer
     ex_kw["metrics"] = metrics
     if profiler is not None:
@@ -349,10 +428,17 @@ def main(argv=None) -> int:
                          "transport; sparse (top-k + error feedback) is "
                          "the paper's slow-link answer, xla the dense "
                          "bit-exact baseline")
-    ap.add_argument("--tier1-frac", type=float, default=None,
+    ap.add_argument("--tier1-frac", default=None,
                     help="sparse tier 1: keep-fraction of entries per "
                          "inter-host merge (default: the k/kappa = 0.25 "
-                         "acceptance point)")
+                         "acceptance point), or 'auto' to size it from "
+                         "measured bandwidth — a host-side controller "
+                         "halves/doubles the fraction so the inter-host "
+                         "transfer stays on --tier1-budget-ticks wall "
+                         "ticks per window")
+    ap.add_argument("--tier1-budget-ticks", type=int, default=2,
+                    help="--tier1-frac auto: target wall ticks per window "
+                         "for the tier-1 (DCN) transfer")
     ap.add_argument("--latency", type=int, default=1)
     ap.add_argument("--p-delay", type=float, default=0.5)
     ap.add_argument("--resize", default="",
@@ -373,6 +459,28 @@ def main(argv=None) -> int:
                     help="quorum merge: fraction of workers whose deltas "
                          "must arrive for the merge to apply (late deltas "
                          "fold in damped by the stale-window rule)")
+    ap.add_argument("--merge", choices=("quorum", "dynamic"), default=None,
+                    help="merge strategy override (delta scheme, mesh "
+                         "executor): 'quorum' = the straggler-tolerant "
+                         "merge (same as --quorum), 'dynamic' = "
+                         "divergence-triggered merges — workers sync only "
+                         "on windows where the measured codebook drift "
+                         "crosses --divergence-thresh (Kamp-style dynamic "
+                         "averaging), capped by --max-stale")
+    ap.add_argument("--divergence-thresh", type=float, default=0.0,
+                    help="--merge dynamic: global squared-drift threshold "
+                         "that fires a sync; 0.0 syncs every window "
+                         "(bitwise-identical to the plain delta merge)")
+    ap.add_argument("--max-stale", type=int, default=8,
+                    help="--merge dynamic: force a sync after this many "
+                         "consecutive skipped windows (bounds the eq.-8 "
+                         "staleness damping)")
+    ap.add_argument("--wire-quant", choices=("off", "bf16", "int8"),
+                    default="off",
+                    help="quantize merge deltas on the wire (mesh "
+                         "executor): bf16 halves, int8 quarters the merge "
+                         "wire bytes, both with error-feedback residual so "
+                         "the quantization error re-enters the next merge")
     ap.add_argument("--duration-s", type=float, default=2.0,
                     help="thread backend: wall seconds to run")
     ap.add_argument("--comm-delay-s", type=float, default=0.0,

@@ -1,0 +1,505 @@
+"""Adaptive-communication tests (ISSUE 10): divergence-triggered dynamic
+merges, the quantized delta wire format, and the bandwidth-adaptive sparse
+tier.
+
+The anchors: thresh=0 + quantization off must reproduce the plain fixed-tau
+delta merge BITWISE; identity quantization over any transport is
+bit-transparent; quantized wire bytes are exact integer arithmetic the gate
+pins; and the dynamic merge's honest accounting (post-run record re-pricing
++ every-window probe) keeps dynamic total wire at or under fixed.
+"""
+
+from repro.xla_flags import force_host_devices
+
+force_host_devices(8)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro import comm  # noqa: E402
+from repro.comm import (QUANT_WIDTH, QuantizedTransport,  # noqa: E402
+                        SparseTransport, get_transport, quantize_leaf,
+                        ring_wire_bytes)
+from repro.comm.sparse import topk_count  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.engine import (InstantNetwork, MeshExecutor,  # noqa: E402
+                          Tier1BudgetController, get_network)
+from repro.topology import Topology  # noqa: E402
+
+KEY = jax.random.PRNGKey(42)
+TAU = 10
+D, KAPPA = 8, 16
+FRAC_Q = (KAPPA // 4) / (KAPPA * D)   # k/kappa = 0.25 acceptance point
+
+
+def _setup(m, n=400):
+    kd, kw = jax.random.split(KEY)
+    data = synthetic.replicate_stream(kd, m, n=n, d=D)
+    eval_data = data[:, :200]
+    w0 = synthetic.kmeanspp_init(kw, data.reshape(-1, D), KAPPA)
+    return data, eval_data, w0
+
+
+def _run(m, transport, n=400, **ex_kw):
+    data, eval_data, w0 = _setup(m, n=n)
+    ex = MeshExecutor(network=InstantNetwork(), transport=transport, **ex_kw)
+    res = ex.run("delta", w0, data, eval_data, tau=TAU,
+                 key=jax.random.fold_in(KEY, 9))
+    return res, ex
+
+
+# ---------------------------------------------------------------------------
+# quantize_leaf codecs
+# ---------------------------------------------------------------------------
+
+def test_quantize_leaf_identity_is_exact():
+    x = jax.random.normal(KEY, (KAPPA, D))
+    assert np.array_equal(np.asarray(quantize_leaf(x, "identity")),
+                          np.asarray(x))
+
+
+def test_quantize_leaf_bf16_error_bound():
+    x = jax.random.normal(KEY, (KAPPA, D)) * 3.0
+    deq = np.asarray(quantize_leaf(x, "bf16"))
+    # bf16 keeps 8 significand bits: relative error <= 2^-8 per entry
+    rel = np.abs(deq - np.asarray(x)) / np.maximum(np.abs(np.asarray(x)),
+                                                   1e-12)
+    assert rel.max() <= 2.0 ** -8
+
+
+def test_quantize_leaf_int8_error_bound():
+    x = jax.random.normal(KEY, (KAPPA, D)) * 5.0
+    deq = np.asarray(quantize_leaf(x, "int8"))
+    # symmetric max-abs scaling: |err| <= scale/2 = amax/254 per entry
+    amax = float(np.abs(np.asarray(x)).max())
+    assert np.abs(deq - np.asarray(x)).max() <= amax / 254 + 1e-7
+
+
+def test_quantize_leaf_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown quantization mode"):
+        quantize_leaf(jnp.zeros((2,)), "fp4")
+
+
+def test_quant_transport_rejects_nesting_and_kwargs():
+    with pytest.raises(ValueError, match="double"):
+        QuantizedTransport(inner=QuantizedTransport())
+    with pytest.raises(ValueError, match="string inner spec"):
+        QuantizedTransport(inner=get_transport("sparse", frac=0.1),
+                           frac=0.2)
+    with pytest.raises(ValueError, match="unknown quantization mode"):
+        get_transport("quant", mode="fp4")
+
+
+# ---------------------------------------------------------------------------
+# identity quantization is bit-transparent (numerics AND accounting)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, pytest.param(8, marks=pytest.mark.devices(8))])
+@pytest.mark.parametrize("inner", ["xla", "sparse"])
+def test_identity_quant_bitwise_transparent(m, inner):
+    kw = {"frac": FRAC_Q} if inner == "sparse" else {}
+    ref, ex_ref = _run(m, get_transport(inner, **kw))
+    out, ex_out = _run(m, get_transport("quant", inner=inner, mode="identity",
+                                        **kw))
+    assert np.array_equal(np.asarray(ref.distortion),
+                          np.asarray(out.distortion))
+    assert np.array_equal(np.asarray(ref.w_shared), np.asarray(out.w_shared))
+    assert (ex_ref.last_comm["by_tag"]["merge"]["wire_bytes"]
+            == ex_out.last_comm["by_tag"]["merge"]["wire_bytes"])
+
+
+# ---------------------------------------------------------------------------
+# quantized wire accounting: exact integer pins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(8)
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_quant_dense_wire_bytes_exact(mode):
+    n, m = 400, 8
+    res, ex = _run(m, get_transport("quant", inner="xla", mode=mode), n=n)
+    n_windows = n // TAU
+    dense = ring_wire_bytes(KAPPA * D * 4, m)        # per-window f32 ring
+    per_window = dense * QUANT_WIDTH[mode] // 4
+    if mode == "int8":
+        per_window += 4                               # one leaf's scale
+    assert (ex.last_comm["by_tag"]["merge"]["wire_bytes"]
+            == per_window * n_windows)
+    # eval reduces ride op='mean': unquantized, same as the dense run
+    _, ex_ref = _run(m, get_transport("xla"), n=n)
+    assert (ex.last_comm["by_tag"]["eval"]["wire_bytes"]
+            == ex_ref.last_comm["by_tag"]["eval"]["wire_bytes"])
+
+
+@pytest.mark.devices(8)
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_quant_sparse_wire_bytes_exact(mode):
+    n, m = 400, 8
+    res, ex = _run(m, get_transport("quant", inner="sparse", mode=mode,
+                                    frac=FRAC_Q), n=n)
+    n_windows = n // TAU
+    k = topk_count(KAPPA * D, FRAC_Q)
+    sparse = (m - 1) * k * 8                 # (value f32, index i32) pairs
+    per_window = sparse * (QUANT_WIDTH[mode] + 4) // 8
+    if mode == "int8":
+        per_window += 4
+    assert (ex.last_comm["by_tag"]["merge"]["wire_bytes"]
+            == per_window * n_windows)
+    rec = next(r for r in ex.transport.log.records if r.tag == "merge")
+    assert rec.transport == f"sparse+{mode}"
+
+
+@pytest.mark.devices(8)
+def test_quant_over_hier_preserves_tiers():
+    topo = Topology.from_spec(8, hosts=2)
+    hier = comm.HierarchicalTransport(
+        tier0="xla", tier1="sparse", tier1_frac=FRAC_Q,
+        host_axis=topo.host_axis, worker_axis=topo.worker_axis)
+    data, eval_data, w0 = _setup(8)
+    ex = MeshExecutor(network=InstantNetwork(), topology=topo,
+                      transport=get_transport("quant", inner=hier,
+                                              mode="int8"))
+    res = ex.run("delta", w0, data, eval_data, tau=TAU,
+                 key=jax.random.fold_in(KEY, 9))
+    by_tier = ex.last_comm["by_tag"]["merge"]["by_tier"]
+    assert set(by_tier) == {0, 1}
+    n_windows = 400 // TAU
+    # tier 0: dense ring over the 4 workers of each host, int8 width
+    t0_dense = ring_wire_bytes(KAPPA * D * 4, 4)
+    assert by_tier[0]["wire_bytes"] == (t0_dense // 4 + 4) * n_windows
+    # tier 1: sparse gather across the 2 hosts, only values narrow
+    k = topk_count(KAPPA * D, FRAC_Q)
+    t1_sparse = (2 - 1) * k * 8
+    assert by_tier[1]["wire_bytes"] == (t1_sparse * 5 // 8 + 4) * n_windows
+    assert np.isfinite(float(res.distortion[-1]))
+
+
+# ---------------------------------------------------------------------------
+# error feedback: the rounding mass is delayed, not lost
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_residual_telescopes():
+    # across calls, sum(dequantized payloads) + final residual ==
+    # sum(raw deltas): nothing is lost, only delayed
+    t = QuantizedTransport(inner="xla", mode="int8")
+    key = KEY
+    deltas = [jax.random.normal(jax.random.fold_in(key, i), (KAPPA, D))
+              for i in range(4)]
+    residual = jnp.zeros((KAPPA, D), jnp.float32)
+    shipped = jnp.zeros((KAPPA, D), jnp.float32)
+    for d in deltas:
+        deq, residual = t._encode(d, residual, None)
+        shipped = shipped + deq
+    total = sum(np.asarray(d) for d in deltas)
+    np.testing.assert_allclose(np.asarray(shipped + residual), total,
+                               rtol=0, atol=1e-5)
+    # and the residual is genuinely nonzero mid-stream (int8 rounds)
+    assert float(jnp.abs(residual).max()) > 0
+
+
+@pytest.mark.devices(8)
+def test_error_feedback_tracks_dense_distortion():
+    ref, _ = _run(8, get_transport("xla"))
+    out, _ = _run(8, get_transport("quant", inner="xla", mode="int8"))
+    np.testing.assert_allclose(np.asarray(out.distortion),
+                               np.asarray(ref.distortion), rtol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# dynamic merge: bitwise anchor, skipping, staleness cap, honest accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, pytest.param(8, marks=pytest.mark.devices(8))])
+def test_dynamic_thresh0_bitmatches_delta(m):
+    ref, ex_ref = _run(m, get_transport("xla"))
+    dyn, ex_dyn = _run(m, get_transport("xla"), merge="dynamic",
+                       divergence_thresh=0.0)
+    assert np.array_equal(np.asarray(ref.distortion),
+                          np.asarray(dyn.distortion))
+    assert np.array_equal(np.asarray(ref.w_shared), np.asarray(dyn.w_shared))
+    # every window triggered: merge wire matches the fixed-tau run exactly
+    assert (ex_dyn.last_comm["by_tag"]["merge"]["wire_bytes"]
+            == ex_ref.last_comm["by_tag"]["merge"]["wire_bytes"])
+
+
+@pytest.mark.devices(8)
+def test_dynamic_high_thresh_skips_and_reprices():
+    n, m = 400, 8
+    n_windows = n // TAU
+    _, ex_ref = _run(m, get_transport("xla"), n=n)
+    dyn, ex = _run(m, get_transport("xla"), n=n, merge="dynamic",
+                   divergence_thresh=1e-3, max_stale=8)
+    merge = ex.last_comm["by_tag"]["merge"]
+    probe = ex.last_comm["by_tag"]["probe"]
+    n_trig = merge["calls"]
+    assert 0 < n_trig < n_windows
+    # honest accounting: merge wire re-priced to the triggered windows,
+    # the probe paid on every window
+    per_window = ring_wire_bytes(KAPPA * D * 4, m)
+    assert merge["wire_bytes"] == per_window * n_trig
+    assert probe["calls"] == n_windows
+    assert (merge["wire_bytes"] + probe["wire_bytes"]
+            < ex_ref.last_comm["by_tag"]["merge"]["wire_bytes"])
+    assert np.isfinite(float(dyn.distortion[-1]))
+
+
+@pytest.mark.devices(8)
+def test_dynamic_max_stale_forces_syncs():
+    # with an unreachable threshold, the staleness cap is the only trigger:
+    # exactly every max_stale-th window syncs
+    n, max_stale = 400, 4
+    n_windows = n // TAU
+    _, ex = _run(8, get_transport("xla"), n=n, merge="dynamic",
+                 divergence_thresh=1e9, max_stale=max_stale)
+    assert ex.last_comm["by_tag"]["merge"]["calls"] == n_windows // max_stale
+
+
+def test_dynamic_rejects_bad_params():
+    with pytest.raises(ValueError, match="divergence_thresh"):
+        MeshExecutor(network=InstantNetwork(), merge="dynamic",
+                     divergence_thresh=-1.0)
+    with pytest.raises(ValueError, match="max_stale"):
+        MeshExecutor(network=InstantNetwork(), merge="dynamic", max_stale=0)
+    data, eval_data, w0 = _setup(1)
+    ex = MeshExecutor(network=InstantNetwork(), merge="dynamic")
+    with pytest.raises(ValueError, match="delta"):
+        ex.run("average", w0, data, eval_data, tau=TAU)
+
+
+@pytest.mark.devices(8)
+def test_dynamic_composes_with_quant():
+    dyn, ex = _run(8, get_transport("quant", inner="xla", mode="int8"),
+                   merge="dynamic", divergence_thresh=1e-3)
+    merge = ex.last_comm["by_tag"]["merge"]
+    n_trig = merge["calls"]
+    assert 0 < n_trig < 400 // TAU
+    per_window = ring_wire_bytes(KAPPA * D * 4, 8) // 4 + 4
+    assert merge["wire_bytes"] == per_window * n_trig
+    assert np.isfinite(float(dyn.distortion[-1]))
+
+
+# ---------------------------------------------------------------------------
+# observability: counters, gauge, span tags
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(8)
+def test_dynamic_obs_counters_and_span_tags():
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.obs.check import check_trace
+
+    n = 400
+    n_windows = n // TAU
+    data, eval_data, w0 = _setup(8, n=n)
+    tr, mt = Tracer(), MetricsRegistry()
+    ex = MeshExecutor(network=InstantNetwork(),
+                      transport=get_transport("xla"), merge="dynamic",
+                      divergence_thresh=1e-3, tracer=tr, metrics=mt)
+    ex.run("delta", w0, data, eval_data, tau=TAU,
+           key=jax.random.fold_in(KEY, 9))
+    n_trig = ex.last_comm["by_tag"]["merge"]["calls"]
+    assert mt.counter("divergence_trigger", scheme="delta").value == n_trig
+    assert (mt.counter("merge_skipped_total", scheme="delta").value
+            == n_windows - n_trig)
+    # merge spans carry the per-window trigger bit; the trace passes the
+    # checker with the new counter series expected
+    merges = tr.spans("merge")
+    assert merges and all("triggered" in s.attrs for s in merges)
+    assert (sum(s.attrs["triggered"] for s in merges) == n_trig)
+    errs = check_trace(tr.chrome_events(),
+                       expect_counters=["divergence_trigger"])
+    assert errs == []
+
+
+@pytest.mark.devices(8)
+def test_quant_metrics_mirror_matches_log():
+    # the registry mirror must agree with the log AFTER the dynamic-merge
+    # rewrite backs out trace-time counts (sign=-1 re-accounting)
+    from repro.obs import MetricsRegistry
+    mt = MetricsRegistry()
+    t = get_transport("quant", inner="xla", mode="int8")
+    t.log.attach_metrics(mt)
+    _, ex = _run(8, t, merge="dynamic", divergence_thresh=1e-3)
+    logged = sum(r.wire_bytes * r.calls for r in t.log.records)
+    mirrored = sum(c.value for (name, _), c in mt._metrics.items()
+                   if name == "comm_wire_bytes")
+    assert mirrored == logged
+
+
+# ---------------------------------------------------------------------------
+# Tier1BudgetController: factor-2 ladder + target resolution
+# ---------------------------------------------------------------------------
+
+def test_tier1_controller_ladder():
+    net = get_network("fixed", latency_ticks=1, dcn_bytes_per_tick=100)
+    ctl = Tier1BudgetController(net, budget_ticks=2, min_frac=1 / 64,
+                                max_frac=1.0)
+    sp = SparseTransport(frac=0.25)
+    # 1000 B/window -> 10 ticks > 2: halve
+    assert ctl.update(sp, 1000) == pytest.approx(0.125)
+    # overshoot repeatedly: clamp at min_frac
+    for _ in range(10):
+        ctl.update(sp, 1000)
+    assert sp.frac == pytest.approx(1 / 64)
+    # 50 B/window -> 1 tick <= low_water * budget: double back up
+    assert ctl.update(sp, 50) == pytest.approx(1 / 32)
+    # dead zone (> low_water, <= budget): hold
+    assert ctl.update(sp, 150) == pytest.approx(1 / 32)
+    # free wire relaxes to max_frac
+    for _ in range(10):
+        ctl.update(sp, 0)
+    assert sp.frac == pytest.approx(1.0)
+
+
+def test_tier1_controller_target_resolution():
+    net = get_network("fixed", dcn_bytes_per_tick=100)
+    ctl = Tier1BudgetController(net)
+    # dense transports expose no frac knob: no-op
+    assert ctl.update(get_transport("xla"), 1000) is None
+    # quant decorator is transparent
+    q = get_transport("quant", inner="sparse", mode="bf16", frac=0.5)
+    assert ctl.update(q, 10_000) == pytest.approx(0.25)
+    assert q.inner.frac == pytest.approx(0.25)
+
+
+def test_tier1_controller_rejects_bad_params():
+    net = InstantNetwork()
+    with pytest.raises(ValueError, match="budget_ticks"):
+        Tier1BudgetController(net, budget_ticks=0)
+    with pytest.raises(ValueError, match="min_frac"):
+        Tier1BudgetController(net, min_frac=0.5, max_frac=0.25)
+    with pytest.raises(ValueError, match="low_water"):
+        Tier1BudgetController(net, low_water=1.5)
+
+
+@pytest.mark.devices(8)
+def test_tier1_controller_mesh_integration():
+    # a slow DCN drives the sparse tier-1 frac DOWN across published
+    # chunks; the frac lands on the controller and is mirrored to the
+    # gauge, and the per-frac programs recompile cleanly (cache keyed on
+    # the live frac)
+    from repro.obs import MetricsRegistry
+    topo = Topology.from_spec(8, hosts=2)
+    hier = comm.HierarchicalTransport(
+        tier0="xla", tier1="sparse", tier1_frac=0.5,
+        host_axis=topo.host_axis, worker_axis=topo.worker_axis)
+    net = get_network("fixed", latency_ticks=1, dcn_bytes_per_tick=8)
+    ctl = Tier1BudgetController(net, budget_ticks=2)
+    mt = MetricsRegistry()
+    data, eval_data, w0 = _setup(8)
+    ex = MeshExecutor(network=net, topology=topo, transport=hier,
+                      tier1_controller=ctl, publish_every=8, metrics=mt)
+    res = ex.run("delta", w0, data, eval_data, tau=TAU,
+                 key=jax.random.fold_in(KEY, 9))
+    assert ctl.last_frac is not None and ctl.last_frac < 0.5
+    assert hier.tier1.frac == ctl.last_frac
+    assert mt.gauge("tier1_frac").value == ctl.last_frac
+    assert np.isfinite(float(res.distortion[-1]))
+
+
+# ---------------------------------------------------------------------------
+# the adapt bench gate (unit-level, toy docs)
+# ---------------------------------------------------------------------------
+
+def _adapt_doc():
+    cells = []
+    for quant, fixed_w, dyn_w in (("dense", 21504, 16296),
+                                  ("bf16", 10752, 8136),
+                                  ("int8", 5472, 4224)):
+        base = {"kind": "cell", "quant": quant, "m": 8, "n": 240, "d": 8,
+                "kappa": 16, "tau": 10, "wall_s": 0.01, "n_windows": 24,
+                "final_C": 0.0207}
+        cells.append({**base, "merge": "fixed", "thresh": None,
+                      "max_stale": None, "merge_wire_bytes": fixed_w,
+                      "probe_wire_bytes": 0, "total_wire_bytes": fixed_w,
+                      "n_triggered": 24})
+        cells.append({**base, "merge": "dynamic", "thresh": 2e-5,
+                      "max_stale": 8, "merge_wire_bytes": dyn_w - 168,
+                      "probe_wire_bytes": 168, "total_wire_bytes": dyn_w,
+                      "n_triggered": 18, "final_C": 0.0208})
+    legs = [{"kind": "fixed_leg", "tau": t, "total_wire_bytes": w,
+             "n_windows": 240 // t, "final_C": c}
+            for t, w, c in ((5, 43008, 0.0211), (10, 21504, 0.0207),
+                            (20, 10752, 0.0208))]
+    summary = {"kind": "adapt_summary", "bitmatch": True, "best_tau": 10,
+               "best_final_C": 0.0207, "best_wire_bytes": 21504,
+               "dyn_dense_final_C": 0.0208, "dyn_dense_wire_bytes": 16296,
+               "dyn_int8_final_C": 0.0208, "dyn_int8_wire_bytes": 4224,
+               "dynamic_wire_ok": True}
+    return {"suite": "adapt", "results": cells + legs + [summary]}
+
+
+def test_check_adapt_passes_identical():
+    from benchmarks.check_regression import check_adapt
+    ok, _ = check_adapt(_adapt_doc(), _adapt_doc())
+    assert ok
+
+
+def test_check_adapt_catches_wire_drift():
+    from benchmarks.check_regression import check_adapt
+    fresh = _adapt_doc()
+    cell = next(r for r in fresh["results"]
+                if r.get("merge") == "dynamic" and r.get("quant") == "int8")
+    cell["total_wire_bytes"] += 8
+    ok, msgs = check_adapt(_adapt_doc(), fresh)
+    assert not ok and any("drifted" in m for m in msgs)
+
+
+def test_check_adapt_catches_bitmatch_and_wire_bars():
+    from benchmarks.check_regression import check_adapt
+    fresh = _adapt_doc()
+    s = next(r for r in fresh["results"] if r["kind"] == "adapt_summary")
+    s["bitmatch"] = False
+    ok, msgs = check_adapt(_adapt_doc(), fresh)
+    assert not ok and any("bit-match" in m for m in msgs)
+    fresh = _adapt_doc()
+    s = next(r for r in fresh["results"] if r["kind"] == "adapt_summary")
+    s["dyn_dense_wire_bytes"] = s["best_wire_bytes"]      # not strictly under
+    ok, msgs = check_adapt(_adapt_doc(), fresh)
+    assert not ok and any("strictly" in m for m in msgs)
+
+
+def test_check_adapt_rejects_lost_cell_and_config_drift():
+    from benchmarks.check_regression import check_adapt
+    fresh = _adapt_doc()
+    fresh["results"] = [r for r in fresh["results"]
+                        if not (r.get("merge") == "dynamic"
+                                and r.get("quant") == "bf16")]
+    with pytest.raises(ValueError, match="missing baseline cells"):
+        check_adapt(_adapt_doc(), fresh)
+    fresh = _adapt_doc()
+    next(r for r in fresh["results"]
+         if r.get("merge") == "dynamic")["thresh"] = 1e-3
+    with pytest.raises(ValueError, match="config"):
+        check_adapt(_adapt_doc(), fresh)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+
+@pytest.mark.devices(8)
+def test_train_cli_dynamic_int8(capsys):
+    from repro.launch import train
+    rc = train.main([
+        "--mode", "vq", "--executor", "mesh", "--workers", "8",
+        "--points", "200", "--scheme", "delta", "--merge", "dynamic",
+        "--divergence-thresh", "0.001", "--wire-quant", "int8"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "quant[int8:xla]" in out and "done:" in out
+
+
+def test_train_cli_rejects_bad_combos(capsys):
+    from repro.launch import train
+    assert train.main(["--mode", "vq", "--executor", "sim",
+                       "--merge", "dynamic"]) == 2
+    assert train.main(["--mode", "vq", "--executor", "mesh",
+                       "--merge", "dynamic", "--scheme", "average"]) == 2
+    assert train.main(["--mode", "vq", "--executor", "mesh",
+                       "--merge", "dynamic", "--resize", "10:4"]) == 2
+    assert train.main(["--mode", "vq", "--executor", "mesh",
+                       "--hosts", "2", "--tier1-frac", "bogus"]) == 2
+    assert train.main(["--mode", "vq", "--executor", "mesh",
+                       "--tier1-frac", "auto"]) == 2
+    capsys.readouterr()
